@@ -1,0 +1,45 @@
+"""Shared benchmark utilities: timing + the paper-scale performance model."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+import numpy as np
+
+Row = Tuple[str, float, str]  # (name, us_per_call, derived)
+
+
+def timeit(fn: Callable, *args, repeat: int = 5, warmup: int = 1) -> float:
+    """Median wall time of fn(*args) in microseconds."""
+    for _ in range(warmup):
+        fn(*args)
+    ts = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn(*args)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def paper_perf_model(arch: str = "dsv2-lite", n_trace: int = 4096, skew: float = 1.0,
+                     slots: int = 12, s_ctx: float = 512.0, hw=None, trials: int = 6,
+                     scheduler=None):
+    """PerfModel on the paper's H100 testbed constants with a ShareGPT-like
+    skewed routing trace (the common setup of Figs. 8–16)."""
+    from repro.configs import get_config
+    from repro.core.amax import MonteCarloAmax, make_routing_trace
+    from repro.core.comm import H100
+    from repro.core.scaling import PerfModel
+
+    cfg = get_config(arch)
+    trace = make_routing_trace(n_trace, cfg.num_experts, cfg.top_k, skew=skew, seed=0)
+    kw = {}
+    if scheduler is not None:
+        kw["scheduler"] = scheduler
+    mc = MonteCarloAmax(trace, cfg.num_experts, trials=trials, **kw)
+    return PerfModel(cfg, hw=hw or H100, amax_estimator=mc, slots_per_instance=slots, s_ctx=s_ctx), trace
+
+
+def fmt_rows(rows: List[Row]) -> str:
+    return "\n".join(f"{n},{us:.2f},{d}" for n, us, d in rows)

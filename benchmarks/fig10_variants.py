@@ -1,0 +1,35 @@
+"""Fig. 10 — Scaled-DS variants: TPOT reduction of Janus (AEBS + 2PC) vs a
+MegaScale-style baseline (random scheduling, AGate), at 8 and 16 MoE
+instances.  Scaled-DS-2's larger pool needs 16 instances before replica
+redundancy restores scheduling gains — the paper's observation."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Row, paper_perf_model, timeit
+from repro.core.baselines import random_numpy
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    rng = np.random.default_rng(0)
+    for arch in ("scaled-ds-1", "scaled-ds-2"):
+        for n_e in (8, 16):
+            pm_j, _ = paper_perf_model(arch, slots=32)
+            pm_m, _ = paper_perf_model(
+                arch, slots=32, scheduler=lambda e, l: random_numpy(e, l, rng)
+            )
+            for B in (128, 512):
+                us = timeit(lambda: pm_j.tpot(B, 4, n_e), repeat=2)
+                tj = pm_j.tpot(B, 4, n_e, scheme="2pc")
+                tm_base = pm_m.tpot(B, 4, n_e, scheme="agate")
+                red = 1.0 - tj.tpot / tm_base.tpot
+                rows.append(
+                    (
+                        f"fig10/{arch}_E{n_e}_B{B}",
+                        us,
+                        f"janus={tj.tpot*1000:.0f}ms megascale={tm_base.tpot*1000:.0f}ms reduction={red*100:.0f}%",
+                    )
+                )
+    return rows

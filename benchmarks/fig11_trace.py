@@ -1,0 +1,31 @@
+"""Fig. 11 — 24-hour production-trace scaling study (trace-driven simulation,
+15-minute decision interval): GPU-hours + SLO attainment per system."""
+
+from __future__ import annotations
+
+from benchmarks.common import Row, paper_perf_model, timeit
+from repro.serving.simulator import ClusterSimulator
+from repro.serving.trace import diurnal_rate_profile
+
+
+def run() -> list[Row]:
+    pm, _ = paper_perf_model()
+    sim = ClusterSimulator(pm, slo=0.2, n_max=32)
+    t, rates = diurnal_rate_profile(hours=24, step_minutes=15.0, mean_rate=30.0, seed=0)
+    us = timeit(lambda: sim.run_janus(t[:4], rates[:4], 256.0), repeat=1)
+    res = sim.compare(t, rates, tokens_per_req=256.0)
+    rows: list[Row] = []
+    base = res["janus"].gpu_hours
+    for name, r in res.items():
+        save = (1 - base / r.gpu_hours) * 100 if r.gpu_hours > 0 and name != "janus" else 0.0
+        gpus = [rec.total_gpus for rec in r.records]
+        rows.append(
+            (
+                f"fig11/{name}",
+                us,
+                f"gpu_hours={r.gpu_hours:.0f} slo={r.slo_attainment*100:.0f}% "
+                f"range={min(gpus)}-{max(gpus)}gpus"
+                + (f" janus_saves={save:.0f}%" if name != "janus" else ""),
+            )
+        )
+    return rows

@@ -1,0 +1,37 @@
+"""Fig. 12 — ablation of Janus's mechanisms: one-phase vs two-phase
+communication × attention-side vs MoE-side gating × ±AEBS."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Row, paper_perf_model, timeit
+from repro.core.baselines import random_numpy
+
+
+def run() -> list[Row]:
+    rng = np.random.default_rng(0)
+    pm_aebs, _ = paper_perf_model()
+    pm_rand, _ = paper_perf_model(scheduler=lambda e, l: random_numpy(e, l, rng))
+    n_a, n_e = 4, 8
+    rows: list[Row] = []
+    variants = [
+        ("1PC+EGate+AEBS", pm_aebs, "1pc"),
+        ("2PC+AGate+rand", pm_rand, "agate"),
+        ("2PC+EGate+rand", pm_rand, "2pc"),
+        ("2PC+EGate+AEBS(full)", pm_aebs, "2pc"),
+    ]
+    full = None
+    for B in (64, 256, 512):
+        us = timeit(lambda: pm_aebs.tpot(B, n_a, n_e), repeat=2)
+        results = {}
+        for name, pm, scheme in variants:
+            r = pm.tpot(B, n_a, n_e, scheme=scheme)
+            results[name] = r.tpot
+        full = results["2PC+EGate+AEBS(full)"]
+        for name, tpot in results.items():
+            rel = tpot / full
+            rows.append(
+                (f"fig12/{name}_B{B}", us, f"tpot={tpot*1000:.1f}ms vs_full={rel:.2f}x")
+            )
+    return rows

@@ -1,0 +1,40 @@
+"""Fig. 13 — maximum activated-expert count a_max under AEBS vs EPLB-style
+(token-hash) and random scheduling, across batch sizes and MoE-side scales.
+This is REAL execution of the schedulers (numpy path), not a model."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Row, timeit
+from repro.core.aebs import aebs_numpy
+from repro.core.amax import make_routing_trace
+from repro.core.baselines import random_numpy, token_hash_numpy
+from repro.core.placement import build_layout
+
+
+def run() -> list[Row]:
+    E, k, C = 64, 6, 12
+    trace = make_routing_trace(16384, E, k, skew=1.0, seed=0)
+    rng = np.random.default_rng(1)
+    rows: list[Row] = []
+    for n_e in (8, 12, 16):
+        layout = build_layout(trace, E, n_e, C)
+        for B in (16, 64, 256, 512):
+            idxs = [rng.integers(0, trace.shape[0], B) for _ in range(12)]
+            a = {"aebs": [], "eplb": [], "random": []}
+            for idx in idxs:
+                s = trace[idx]
+                a["aebs"].append(aebs_numpy(s, layout)[1].max())
+                a["eplb"].append(token_hash_numpy(s, layout)[1].max())
+                a["random"].append(random_numpy(s, layout, rng)[1].max())
+            us = timeit(lambda: aebs_numpy(trace[idxs[0]], layout), repeat=3)
+            rows.append(
+                (
+                    f"fig13/E{n_e}_B{B}",
+                    us,
+                    f"aebs={np.mean(a['aebs']):.1f} eplb={np.mean(a['eplb']):.1f} "
+                    f"random={np.mean(a['random']):.1f}",
+                )
+            )
+    return rows

@@ -1,0 +1,41 @@
+"""Fig. 14 — MoE-layer latency under scheduling policies (β·a_max + c_e with
+a_max from real scheduler execution; H100 coefficients)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Row, timeit
+from repro.configs import get_config
+from repro.core.aebs import aebs_numpy
+from repro.core.amax import make_routing_trace
+from repro.core.baselines import token_hash_numpy
+from repro.core.comm import H100
+from repro.core.placement import build_layout
+from repro.core.scaling import LayerCoeffs
+
+
+def run() -> list[Row]:
+    cfg = get_config("dsv2-lite")
+    co = LayerCoeffs.from_config(cfg, H100)
+    E, k, C = cfg.num_experts, cfg.top_k, 12
+    trace = make_routing_trace(16384, E, k, skew=1.0, seed=2)
+    rng = np.random.default_rng(3)
+    rows: list[Row] = []
+    for n_e in (8, 16):
+        layout = build_layout(trace, E, n_e, C)
+        for B in (64, 256, 512):
+            idxs = [rng.integers(0, trace.shape[0], B) for _ in range(10)]
+            a_j = np.mean([aebs_numpy(trace[i], layout)[1].max() for i in idxs])
+            a_e = np.mean([token_hash_numpy(trace[i], layout)[1].max() for i in idxs])
+            t_j = (co.beta * a_j + co.c_e) * 1e6
+            t_e = (co.beta * a_e + co.c_e) * 1e6
+            us = timeit(lambda: aebs_numpy(trace[idxs[0]], layout), repeat=3)
+            rows.append(
+                (
+                    f"fig14/E{n_e}_B{B}",
+                    us,
+                    f"janus={t_j:.0f}us eplb={t_e:.0f}us speedup={t_e/t_j:.2f}x",
+                )
+            )
+    return rows

@@ -1,0 +1,30 @@
+"""Fig. 16 — the (n_a, n_e) scaling search space: feasibility structure and
+the selected configuration for three representative cases."""
+
+from __future__ import annotations
+
+from benchmarks.common import Row, paper_perf_model, timeit
+from repro.core.scaling import SLOScaler
+
+
+def run() -> list[Row]:
+    pm, _ = paper_perf_model()
+    rows: list[Row] = []
+    cases = [(64, 0.2), (256, 0.2), (512, 0.3)]
+    for B, slo in cases:
+        sc = SLOScaler(pm, n_max=12)
+        lam = B / pm.tpot(B, 4, 8).tpot
+        us = timeit(lambda: sc.scale(lam, slo), repeat=1)
+        best = sc.scale(lam, slo)
+        feas = [r for r in sc.search_log if r.feasible]
+        infeas = [r for r in sc.search_log if not r.feasible]
+        tag = f"{best.n_a}A{best.n_e}E" if best else "none"
+        rows.append(
+            (
+                f"fig16/B{B}_slo{int(slo*1000)}",
+                us,
+                f"selected={tag} feasible={len(feas)} infeasible={len(infeas)} "
+                f"best_tpg={best.tpg:.0f}" if best else "infeasible",
+            )
+        )
+    return rows

@@ -1,0 +1,29 @@
+"""Fig. 17 / Appendix A — analytical a_max bound (Eq. 5) vs the Monte-Carlo
+estimate across n_e ∈ {6, 8, 12, 16} and three batch-size regimes."""
+
+from __future__ import annotations
+
+from benchmarks.common import Row, timeit
+from repro.core.amax import MonteCarloAmax, amax_bound, make_routing_trace
+from repro.core.placement import build_layout
+
+
+def run() -> list[Row]:
+    E, k, C = 64, 6, 27
+    trace = make_routing_trace(16384, E, k, skew=0.8, seed=0)
+    mc = MonteCarloAmax(trace, E, trials=12)
+    rows: list[Row] = []
+    violations = 0
+    for n_e in (6, 8, 12, 16):
+        layout = build_layout(trace, E, n_e, min(C, 64 // n_e + 12))
+        for B in (4, 16, 64, 256, 512):
+            us = timeit(lambda: mc.estimate(layout, B), repeat=1)
+            est = mc.estimate(layout, B)
+            bd = amax_bound(n_e, B, E, k, layout.capacity)
+            if bd < est:
+                violations += 1
+            rows.append(
+                (f"fig17/ne{n_e}_B{B}", us, f"mc={est:.2f} bound={bd} gap={bd-est:.2f}")
+            )
+    rows.append(("fig17/one_sided_violations", 0.0, str(violations)))
+    return rows

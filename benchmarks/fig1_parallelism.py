@@ -1,0 +1,31 @@
+"""Fig. 1 — normalized latency of attention and MoE layers vs parallelism
+degree at several batch sizes: attention barely benefits at small/moderate
+batch (memory-bound plateau), MoE consistently benefits (fewer activated
+experts per instance) though sublinearly."""
+
+from __future__ import annotations
+
+from benchmarks.common import Row, paper_perf_model, timeit
+
+
+def run() -> list[Row]:
+    pm, _ = paper_perf_model()
+    rows: list[Row] = []
+    us = timeit(lambda: pm.t_attn(16.0))
+    for B in (16, 64, 512):
+        base_attn = None
+        base_moe = None
+        for par in (1, 2, 4, 8):
+            t_attn = pm.t_attn(B / par)  # attention data-parallel degree
+            t_moe, a = pm.t_moe(6 * par, B)  # MoE-side parallelism degree
+            if par == 1:
+                base_attn, base_moe = t_attn, t_moe
+            rows.append(
+                (
+                    f"fig1/B{B}_par{par}",
+                    us,
+                    f"attn={t_attn/base_attn:.2f}x moe={t_moe/base_moe:.2f}x "
+                    f"(ideal={1/par:.2f}x) a_max={a:.1f}",
+                )
+            )
+    return rows

@@ -1,0 +1,34 @@
+"""Fig. 2 — latency patterns of attention vs MoE layers.
+
+Left panel: attention latency rises with batch while MoE latency is nearly
+flat once all experts are touched.  Right panel: MoE latency is linear in the
+number of distinct activated experts.  Derived from the per-layer roofline
+coefficients on the paper's H100 constants."""
+
+from __future__ import annotations
+
+from benchmarks.common import Row, timeit
+from repro.configs import get_config
+from repro.core.comm import H100
+from repro.core.scaling import LayerCoeffs
+
+
+def run() -> list[Row]:
+    cfg = get_config("dsv2-lite")
+    co = LayerCoeffs.from_config(cfg, H100)
+    rows: list[Row] = []
+    us = timeit(lambda: LayerCoeffs.from_config(cfg, H100))
+
+    s_ctx = 512.0
+    for b in (16, 64, 256, 512, 2048):
+        t_attn = max(co.c_a, co.alpha * b + co.c_kv * b * s_ctx)
+        rows.append((f"fig2/attn_latency_B{b}", us, f"{t_attn*1e6:.1f}us"))
+    # MoE latency vs distinct activated experts (32-expert instance, §2.2)
+    for a in (2, 8, 16, 24, 32):
+        t_moe = co.beta * a + co.c_e
+        rows.append((f"fig2/moe_latency_act{a}", us, f"{t_moe*1e6:.1f}us"))
+    # claim check: linearity — ratio of slopes
+    t8 = co.beta * 8 + co.c_e
+    t32 = co.beta * 32 + co.c_e
+    rows.append(("fig2/moe_linear_in_experts", us, f"t32/t8={t32/t8:.2f}"))
+    return rows

@@ -1,0 +1,36 @@
+"""Fig. 3 — MoE-layer latency under token volume and activation skew: with
+all experts activated, batch size and skew have only marginal impact
+(latency is set by distinct activated experts, not token counts)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Row, timeit
+from repro.configs import get_config
+from repro.core.aebs import aebs_numpy
+from repro.core.amax import make_routing_trace
+from repro.core.comm import H100
+from repro.core.placement import build_layout
+from repro.core.scaling import LayerCoeffs
+
+
+def run() -> list[Row]:
+    cfg = get_config("dsv2-lite")
+    co = LayerCoeffs.from_config(cfg, H100)
+    E, k, n_e, C = 32, 1, 1, 32  # the paper's single-GPU 32-expert instance
+    rows: list[Row] = []
+    for skew_name, skew in (("uniform", 0.0), ("skewed", 1.2)):
+        trace = make_routing_trace(8192, E, k, skew=skew, seed=3)
+        layout = build_layout(trace, E, n_e, C)
+        for B in (64, 256, 1024, 4096):
+            rng = np.random.default_rng(B)
+            acts = []
+            for _ in range(8):
+                s = trace[rng.integers(0, len(trace), B)]
+                acts.append(aebs_numpy(s, layout)[1].max())
+            a = float(np.mean(acts))
+            t = (co.beta * a + co.c_e) * 1e6
+            us = timeit(lambda: aebs_numpy(trace[:B], layout), repeat=3)
+            rows.append((f"fig3/{skew_name}_B{B}", us, f"act={a:.1f}/32 latency={t:.0f}us"))
+    return rows

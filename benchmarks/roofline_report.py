@@ -1,0 +1,35 @@
+"""Roofline report — aggregates the dry-run artifacts (results/dryrun/*.json)
+into the §Roofline table: three terms, dominant bottleneck, useful-FLOPs
+ratio, per (arch × shape × mesh)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import Row
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    files = sorted(glob.glob(os.path.join("results", "dryrun", "*.json")))
+    if not files:
+        return [("roofline/missing", 0.0, "run `python -m repro.launch.dryrun --all` first")]
+    for f in files:
+        d = json.load(open(f))
+        if d.get("skipped"):
+            continue
+        name = f"roofline/{d['arch']}__{d['shape']}__{d['mesh']}"
+        total = max(d["t_compute"], d["t_memory"], d["t_collective"])
+        rows.append(
+            (
+                name,
+                d.get("compile_s", 0.0) * 1e6,
+                f"t_comp={d['t_compute']*1e3:.2f}ms t_mem={d['t_memory']*1e3:.2f}ms "
+                f"t_coll={d['t_collective']*1e3:.2f}ms dom={d['dominant']} "
+                f"mem/dev={d['peak_memory_per_device']/2**30:.1f}GiB "
+                f"useful_flops={d['useful_flops_ratio']:.2f}",
+            )
+        )
+    return rows

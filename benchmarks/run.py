@@ -1,0 +1,62 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Run:
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig13,fig15]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+MODULES = [
+    "table1_memory",
+    "fig1_parallelism",
+    "fig2_layer_latency",
+    "fig3_activation_patterns",
+    "fig8_e2e",
+    "fig9_slo",
+    "fig10_variants",
+    "fig11_trace",
+    "fig12_ablation",
+    "fig13_amax",
+    "fig14_moe_latency",
+    "fig15_overhead",
+    "fig16_search",
+    "fig17_bound",
+    "sec6_pipelining",
+    "engine_schedulers",
+    "roofline_report",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma-separated module prefixes")
+    args = ap.parse_args()
+    only = args.only.split(",") if args.only else None
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for modname in MODULES:
+        if only and not any(modname.startswith(o) for o in only):
+            continue
+        t0 = time.perf_counter()
+        try:
+            mod = __import__(f"benchmarks.{modname}", fromlist=["run"])
+            for name, us, derived in mod.run():
+                print(f"{name},{us:.2f},{derived}")
+        except Exception as e:  # pragma: no cover
+            failures += 1
+            print(f"{modname}/ERROR,0,{type(e).__name__}: {e}")
+        finally:
+            dt = time.perf_counter() - t0
+            print(f"{modname}/_wall,{dt*1e6:.0f},ok", file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""§6 discussion — attention/MoE micro-batch pipelining analysis.
+
+The paper argues pipelining attention and MoE across micro-batches (as
+MegaScale-Infer does) has limited benefit at typical online batch sizes:
+splitting a small batch gives little per-micro-batch latency reduction
+(both sides sit on their memory-bound plateaus) while adding per-stage
+synchronisation overhead.  We quantify that with the calibrated layer model:
+
+  T_pipe(m) ≈ (T_attn(B/m) + T_moe(B/m) + sync) · m  overlapped as
+              max-stage-bound pipeline:  (m+1)·max(stage) + sync·m
+  vs  T_seq = T_attn(B) + T_moe(B) + T_comm.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import Row, paper_perf_model, timeit
+
+
+def run() -> list[Row]:
+    pm, _ = paper_perf_model()
+    n_a, n_e = 4, 8
+    sync = 10e-6  # per-micro-batch hand-off overhead
+    rows: list[Row] = []
+    for B in (32, 64, 256, 2048):
+        us = timeit(lambda: pm.tpot(B, n_a, n_e), repeat=2)
+        ta = pm.t_attn(B / n_a)
+        tm, _ = pm.t_moe(n_e, B)
+        tc = pm.t_comm(n_a, n_e, B)
+        t_seq = ta + tm + tc
+        best = ("none", t_seq)
+        for m in (2, 4, 8):
+            ta_m = pm.t_attn(B / n_a / m)
+            tm_m, _ = pm.t_moe(n_e, B / m)
+            stage = max(ta_m, tm_m)
+            t_pipe = (m + 1) * stage + m * (sync + tc / m)
+            if t_pipe < best[1]:
+                best = (f"m={m}", t_pipe)
+        gain = (t_seq - best[1]) / t_seq * 100
+        rows.append(
+            (
+                f"sec6/pipeline_B{B}",
+                us,
+                f"seq={t_seq*1e6:.0f}us best_pipe={best[0]} "
+                f"({best[1]*1e6:.0f}us) gain={gain:.0f}%",
+            )
+        )
+    return rows

@@ -1,0 +1,21 @@
+"""Table 1 — expert vs total memory footprint of MoE configs (the motivation
+for disaggregation: experts dominate)."""
+
+from __future__ import annotations
+
+from benchmarks.common import Row, timeit
+from repro.configs import REGISTRY
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    for name in ("qwen2-moe-a2.7b", "phi3.5-moe-42b-a6.6b", "dsv2-lite", "scaled-ds-1", "scaled-ds-2"):
+        cfg = REGISTRY[name]
+        us = timeit(cfg.param_counts)
+        pc = cfg.param_counts()
+        tot = sum(pc.values()) * cfg.bytes_per_param() / 2**30
+        exp = pc["expert"] * cfg.bytes_per_param() / 2**30
+        rows.append(
+            (f"table1/{name}", us, f"expert={exp:.1f}GiB total={tot:.1f}GiB ratio={exp/tot*100:.1f}%")
+        )
+    return rows

@@ -1,0 +1,54 @@
+"""Fig. 11 reproduction: a 24-hour diurnal trace driven through the Janus
+autoscaler vs SGLang / MegaScale-Infer / xDeepServe scaling policies.
+
+Run:  PYTHONPATH=src python examples/autoscale_trace.py
+"""
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.amax import MonteCarloAmax, make_routing_trace
+from repro.core.comm import H100
+from repro.core.scaling import PerfModel
+from repro.serving.simulator import ClusterSimulator
+from repro.serving.trace import diurnal_rate_profile
+
+
+def sparkline(vals, width=72):
+    blocks = "▁▂▃▄▅▆▇█"
+    vals = np.asarray(vals, float)
+    if len(vals) > width:
+        idx = np.linspace(0, len(vals) - 1, width).astype(int)
+        vals = vals[idx]
+    lo, hi = vals.min(), vals.max()
+    span = (hi - lo) or 1.0
+    return "".join(blocks[int((v - lo) / span * (len(blocks) - 1))] for v in vals)
+
+
+def main():
+    cfg = get_config("dsv2-lite")
+    trace = make_routing_trace(4096, cfg.num_experts, cfg.top_k, skew=1.0, seed=0)
+    mc = MonteCarloAmax(trace, cfg.num_experts, trials=6)
+    pm = PerfModel(cfg, hw=H100, amax_estimator=mc, slots_per_instance=12, s_ctx=512)
+    sim = ClusterSimulator(pm, slo=0.2, n_max=32)
+
+    t, rates = diurnal_rate_profile(
+        hours=24, step_minutes=15.0, mean_rate=30.0, burst_peak_over_mean=7.5, seed=0
+    )
+    print("demand  (req/s):", sparkline(rates))
+    res = sim.compare(t, rates, tokens_per_req=256.0)
+    for name, r in res.items():
+        gpus = [rec.total_gpus for rec in r.records]
+        print(f"{name:11s} gpus:", sparkline(gpus))
+    print()
+    print(f"{'system':12s} {'gpu-hours':>10s} {'slo-attain':>10s} {'gpu range':>10s}")
+    for name, r in res.items():
+        gpus = [rec.total_gpus for rec in r.records]
+        print(f"{name:12s} {r.gpu_hours:10.0f} {r.slo_attainment*100:9.0f}% {min(gpus):>4d}-{max(gpus)}")
+    base = res["janus"].gpu_hours
+    for name in ("sglang", "megascale", "xdeepserve"):
+        print(f"janus saves {100*(1-base/res[name].gpu_hours):.0f}% GPU-hours vs {name}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,99 @@
+"""Regenerate the §Dry-run and §Roofline tables of EXPERIMENTS.md from
+results/dryrun/*.json.  Narrative sections live in EXPERIMENTS.header.md and
+EXPERIMENTS.perf.md and are concatenated around the generated tables.
+
+    PYTHONPATH=src python scripts/build_experiments.py
+"""
+
+import glob
+import json
+import os
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def load():
+    rows = []
+    for f in sorted(glob.glob(os.path.join(ROOT, "results", "dryrun", "*.json"))):
+        d = json.load(open(f))
+        if not d.get("skipped"):
+            rows.append(d)
+    return rows
+
+
+def dryrun_table(rows):
+    out = [
+        "| arch | shape | mesh | chips | peak mem/dev | HLO GFLOP/dev | HLO GB/dev | coll MB/dev | #coll ops | compile s |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for d in rows:
+        out.append(
+            "| {arch} | {shape} | {mesh} | {chips} | {mem:.1f} GiB | {fl:.1f} | {by:.1f} | {co:.1f} | {cnt} | {cs:.0f} |".format(
+                arch=d["arch"], shape=d["shape"], mesh=d["mesh"], chips=d["chips"],
+                mem=d["peak_memory_per_device"] / 2**30,
+                fl=d["flops_per_device"] * d.get("loop_scale", 1) / 1e9,
+                by=d["bytes_per_device"] * d.get("loop_scale", 1) / 1e9,
+                co=d["collective_bytes_per_device"] * d.get("loop_scale", 1) / 1e6,
+                cnt=d.get("hlo_collective_count", d["collective_breakdown"].get("count", 0)),
+                cs=d.get("compile_s", 0),
+            )
+        )
+    return "\n".join(out)
+
+
+def roofline_table(rows):
+    out = [
+        "| arch | shape | mesh | t_compute | t_memory | t_collective | dominant | MODEL_FLOPS/HLO_FLOPS | one-line lever |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    levers = {
+        "memory": "cut HBM traffic: weight/cache dtype, fewer temp copies, better remat policy",
+        "collective": "re-shard to shrink/merge collectives; overlap with compute; hierarchical decomposition",
+        "compute": "raise MXU utilisation: larger fused GEMM tiles, drop redundant recompute",
+    }
+    for d in rows:
+        out.append(
+            "| {arch} | {shape} | {mesh} | {tc:.2f} ms | {tm:.2f} ms | {tl:.2f} ms | **{dom}** | {uf:.2f} | {lev} |".format(
+                arch=d["arch"], shape=d["shape"], mesh=d["mesh"],
+                tc=d["t_compute"] * 1e3, tm=d["t_memory"] * 1e3,
+                tl=d["t_collective"] * 1e3, dom=d["dominant"],
+                uf=d["useful_flops_ratio"], lev=levers[d["dominant"]],
+            )
+        )
+    return "\n".join(out)
+
+
+def main():
+    rows = load()
+    head = open(os.path.join(ROOT, "EXPERIMENTS.header.md")).read()
+    perf = open(os.path.join(ROOT, "EXPERIMENTS.perf.md")).read()
+    single = [d for d in rows if d["mesh"] == "16x16"]
+    multi = [d for d in rows if d["mesh"] == "2x16x16"]
+    doc = "\n".join(
+        [
+            head,
+            "\n## §Dry-run\n",
+            f"All {len(rows)} (architecture × shape × mesh) combinations lower AND compile "
+            "(`.lower().compile()`) on the production meshes — 16×16 (256 chips) and "
+            "2×16×16 (512 chips, the multi-pod pass that proves the `pod` axis shards). "
+            "Raw artifacts: `results/dryrun/*.json` (memory_analysis, cost_analysis, "
+            "collective schedule).\n",
+            "### Single-pod (16×16)\n",
+            dryrun_table(single),
+            "\n### Multi-pod (2×16×16)\n",
+            dryrun_table(multi),
+            "\n## §Roofline (single-pod, per prompt spec)\n",
+            "Terms per the spec: `t_x = per-device HLO quantity / per-chip peak` "
+            "(197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s ICI link), with the "
+            "**loop-scale calibration** described below.\n",
+            roofline_table(single),
+            "\n",
+            perf,
+        ]
+    )
+    open(os.path.join(ROOT, "EXPERIMENTS.md"), "w").write(doc)
+    print("wrote EXPERIMENTS.md with", len(rows), "combos")
+
+
+if __name__ == "__main__":
+    main()

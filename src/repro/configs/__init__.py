@@ -1,0 +1,31 @@
+"""Config registry: ``get_config(name)`` / ``REGISTRY`` / shapes."""
+
+from repro.configs.base import (
+    LONG_CONTEXT_ARCHS,
+    SHAPES,
+    InputShape,
+    ModelConfig,
+    input_specs,
+    shape_supported,
+)
+from repro.configs.archs import ASSIGNED, PAPER_MODELS, REGISTRY
+
+
+def get_config(name: str) -> ModelConfig:
+    if name.endswith("-reduced"):
+        return REGISTRY[name[: -len("-reduced")]].reduced()
+    return REGISTRY[name]
+
+
+__all__ = [
+    "ASSIGNED",
+    "LONG_CONTEXT_ARCHS",
+    "PAPER_MODELS",
+    "REGISTRY",
+    "SHAPES",
+    "InputShape",
+    "ModelConfig",
+    "get_config",
+    "input_specs",
+    "shape_supported",
+]

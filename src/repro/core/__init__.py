@@ -1,0 +1,13 @@
+"""Janus core: the paper's contribution as composable JAX modules.
+
+  aebs       — Activated-Expert-Balanced Scheduling (Alg. 1)
+  placement  — activation-aware replica allocation/placement (Alg. 3)
+  scaling    — SLO-aware fine-grained scaler (Eq. 1–3, Alg. 2)
+  amax       — balls-into-bins bound (Eq. 4–5) + Monte-Carlo estimator
+  comm       — adaptive two-phase communication cost model
+  baselines  — EPLB/random/token-hash schedulers + baseline scaling policies
+  disagg     — attention/MoE pool abstraction
+"""
+
+from repro.core import aebs, amax, baselines, comm, disagg, placement, scaling  # noqa: F401
+from repro.core.aebs import ReplicaLayout, aebs_assign, aebs_numpy  # noqa: F401

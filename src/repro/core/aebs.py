@@ -1,0 +1,205 @@
+"""Activated-Expert-Balanced Scheduling (AEBS) — Janus §3.4, Algorithm 1.
+
+Given the per-token top-k *logical* expert ids and the replica layout
+(which MoE instance hosts which expert replicas), AEBS picks one physical
+replica per *activated* logical expert so that the maximum number of distinct
+activated experts on any MoE instance (``a_max``) is minimised greedily:
+
+  1. collect the set of activated logical experts (union over the batch);
+  2. assign single-replica experts to their unique hosts;
+  3. assign multi-replica experts to the currently least-loaded host
+     (load = activated-expert count), deterministic tie-break by instance id;
+  4. rewrite every token's routing from logical EIDs to physical replica slots.
+
+The algorithm is deterministic in its inputs, which is what lets Janus run it
+redundantly on every MoE instance with no cross-instance synchronisation
+(§3.4 "synchronization-free scheduling").  We preserve that property: the
+jnp implementation is a pure function of (eids, layout) and is intended to be
+executed identically on every model-axis shard inside the jitted serve step.
+
+Three implementations share one semantics:
+  * :func:`aebs_assign`        — pure jnp (jit/vmap-able, runs inside serve_step)
+  * :func:`aebs_numpy`         — host-side (fast path for the cluster simulator)
+  * ``repro.kernels.aebs``     — the Pallas TPU kernel (paper's GPU-kernel analogue)
+All are covered by equivalence tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+INVALID = jnp.int32(-1)
+
+
+# ---------------------------------------------------------------------------
+# Replica layout
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicaLayout:
+    """Physical placement of expert replicas on MoE instances.
+
+    Slots are numbered globally: slot of (instance g, local slot c) is
+    ``g * C + c``.  ``slot_to_expert[g, c]`` is the logical expert hosted
+    there (-1 for an empty slot).
+    """
+
+    num_experts: int  # E
+    num_instances: int  # n_e
+    capacity: int  # C (expert slots per instance)
+    slot_to_expert: np.ndarray  # [n_e, C] int32, -1 = empty
+    # derived tables (computed in __post_init__ equivalents below)
+    expert_hosts: np.ndarray  # [E, R_max] int32 instance ids, -1 padded
+    replica_counts: np.ndarray  # [E] int32
+    slot_of: np.ndarray  # [E, n_e] int32 global slot id of e's replica on g, -1
+
+    @staticmethod
+    def build(slot_to_expert: np.ndarray, num_experts: int) -> "ReplicaLayout":
+        slot_to_expert = np.asarray(slot_to_expert, np.int32)
+        n_e, C = slot_to_expert.shape
+        counts = np.zeros(num_experts, np.int32)
+        slot_of = -np.ones((num_experts, n_e), np.int32)
+        for g in range(n_e):
+            for c in range(C):
+                e = slot_to_expert[g, c]
+                if e >= 0:
+                    if slot_of[e, g] < 0:  # first replica of e on g wins
+                        slot_of[e, g] = g * C + c
+                        counts[e] += 1
+        r_max = max(1, int(counts.max(initial=1)))
+        hosts = -np.ones((num_experts, r_max), np.int32)
+        for e in range(num_experts):
+            gs = np.nonzero(slot_of[e] >= 0)[0]
+            hosts[e, : len(gs)] = gs
+        return ReplicaLayout(
+            num_experts=num_experts,
+            num_instances=n_e,
+            capacity=C,
+            slot_to_expert=slot_to_expert,
+            expert_hosts=hosts,
+            replica_counts=counts,
+            slot_of=slot_of,
+        )
+
+    @staticmethod
+    def round_robin(num_experts: int, num_instances: int, capacity: int) -> "ReplicaLayout":
+        """Default layout: experts 0..E-1 dealt round-robin, leftover slots
+        replicate the first experts (simple redundancy)."""
+        total = num_instances * capacity
+        seq = [e % num_experts for e in range(total)]
+        stx = np.array(seq, np.int32).reshape(num_instances, capacity, order="F")
+        # order='F': slot (g, c) = c * n_e + g  → experts striped across instances
+        return ReplicaLayout.build(stx, num_experts)
+
+    # -- device-side view ----------------------------------------------------
+    def device_tables(self) -> Dict[str, jax.Array]:
+        return {
+            "expert_hosts": jnp.asarray(self.expert_hosts),
+            "replica_counts": jnp.asarray(self.replica_counts),
+            "slot_of": jnp.asarray(self.slot_of),
+        }
+
+    @property
+    def total_slots(self) -> int:
+        return self.num_instances * self.capacity
+
+
+# ---------------------------------------------------------------------------
+# jnp implementation (runs inside jitted serve steps)
+# ---------------------------------------------------------------------------
+
+
+def activated_mask(eids: jax.Array, num_experts: int) -> jax.Array:
+    """Step 1 of the workflow: union of selected EIDs. eids [..., k] -> [E] bool."""
+    flat = eids.reshape(-1)
+    return jnp.zeros(num_experts, bool).at[flat].set(True)
+
+
+def aebs_assign(
+    eids: jax.Array,  # [T, k] int32 logical expert ids
+    tables: Dict[str, jax.Array],  # from ReplicaLayout.device_tables()
+    num_instances: int,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Algorithm 1.  Returns (slot_ids [T,k], load [n_e], act_rep [E]).
+
+    ``slot_ids[t, j]`` is the *global physical slot* serving token t's j-th
+    expert choice; ``load[g]`` the resulting activated-expert count on
+    instance g (so ``a_max = load.max()``).
+    """
+    hosts = tables["expert_hosts"]  # [E, R]
+    counts = tables["replica_counts"]  # [E]
+    slot_of = tables["slot_of"]  # [E, n_e]
+    E = hosts.shape[0]
+
+    act = activated_mask(eids, E)  # [E]
+
+    def assign_pass(carry, want_multi: bool):
+        load, act_rep = carry
+
+        def body(e, c):
+            load, act_rep = c
+            is_multi = counts[e] > 1
+            eligible = act[e] & (is_multi == want_multi) & (counts[e] >= 1)
+            host_row = hosts[e]  # [R]
+            # masked argmin of load over this expert's hosts
+            host_load = jnp.where(host_row >= 0, load[jnp.maximum(host_row, 0)], jnp.iinfo(jnp.int32).max)
+            # deterministic tie-break: lowest replica index (argmin picks first)
+            sel = jnp.argmin(host_load)
+            g = host_row[sel]
+            slot = slot_of[e, jnp.maximum(g, 0)]
+            new_load = load.at[jnp.maximum(g, 0)].add(jnp.where(eligible, 1, 0))
+            new_rep = act_rep.at[e].set(jnp.where(eligible, slot, act_rep[e]))
+            return (jnp.where(eligible, new_load, load), new_rep)
+
+        return jax.lax.fori_loop(0, E, body, (load, act_rep))
+
+    load0 = jnp.zeros(num_instances, jnp.int32)
+    rep0 = jnp.full((E,), INVALID)
+    # pass 1: single-replica experts (their host is forced)
+    load1, rep1 = assign_pass((load0, rep0), want_multi=False)
+    # pass 2: multi-replica experts via least-loaded host
+    load2, rep2 = assign_pass((load1, rep1), want_multi=True)
+
+    slot_ids = rep2[eids]  # [T, k]
+    return slot_ids, load2, rep2
+
+
+def amax_of(load: jax.Array) -> jax.Array:
+    return jnp.max(load)
+
+
+# ---------------------------------------------------------------------------
+# Host-side (numpy) implementation — used by the cluster simulator
+# ---------------------------------------------------------------------------
+
+
+def aebs_numpy(
+    eids: np.ndarray, layout: ReplicaLayout
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Reference host implementation of Algorithm 1 (same semantics)."""
+    E, n_e = layout.num_experts, layout.num_instances
+    act = np.zeros(E, bool)
+    act[np.asarray(eids).reshape(-1)] = True
+    load = np.zeros(n_e, np.int64)
+    act_rep = -np.ones(E, np.int64)
+    activated = np.nonzero(act)[0]
+    singles = [e for e in activated if layout.replica_counts[e] == 1]
+    multis = [e for e in activated if layout.replica_counts[e] > 1]
+    for e in singles:
+        g = int(layout.expert_hosts[e, 0])
+        act_rep[e] = layout.slot_of[e, g]
+        load[g] += 1
+    for e in multis:  # ascending expert id = deterministic order
+        hs = layout.expert_hosts[e]
+        hs = hs[hs >= 0]
+        g = int(hs[np.argmin(load[hs])])
+        act_rep[e] = layout.slot_of[e, g]
+        load[g] += 1
+    slot_ids = act_rep[np.asarray(eids)]
+    return slot_ids, load, act_rep

@@ -1,0 +1,152 @@
+"""a_max estimation — Janus §3.5 + Appendix A.
+
+Two estimators for the maximum number of distinct activated experts on any
+MoE instance, ``a_max(n_e, B)``:
+
+* :func:`amax_bound` — the closed-form balls-into-bins upper bound (Eq. 4–5):
+  adversarial w.r.t. the scheduler, one-sided (never under-predicts).
+* :class:`MonteCarloAmax` — the estimator Janus actually uses at decision
+  time: sample B tokens from a recent routing trace, run the *actual*
+  scheduler against the *actual* replica layout, record the resulting a_max.
+
+Also provides synthetic routing-trace generators (uniform and Zipf-skewed
+top-k activations) standing in for the paper's ShareGPT-derived traces.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core.aebs import ReplicaLayout, aebs_numpy
+
+
+# ---------------------------------------------------------------------------
+# Closed-form bound (Appendix A)
+# ---------------------------------------------------------------------------
+
+
+def expected_instance_load(
+    probs_on_g: np.ndarray, batch: int
+) -> float:
+    """E[a_g] ≤ Σ_{e∈P(g)} [1 - (1 - p_e)^B]   (Eq. 4)."""
+    return float(np.sum(1.0 - np.power(1.0 - probs_on_g, batch)))
+
+
+def amax_bound(
+    n_e: int,
+    batch: int,
+    num_experts: int,
+    top_k: int,
+    capacity: int,
+    probs: Optional[np.ndarray] = None,
+    layout: Optional[ReplicaLayout] = None,
+) -> float:
+    """Eq. 5:  a_max ≤ ceil( min(C, ā_max + sqrt(2 ā_max ln n_e)) + 1 ).
+
+    With a layout + per-expert probabilities, ā_max maximises Eq. 4 over
+    instances; otherwise the uniform p_e = K/E symmetric case is used.
+    """
+    if probs is None:
+        probs = np.full(num_experts, top_k / num_experts)
+    probs = np.minimum(probs, 1.0)
+    if layout is not None:
+        a_bar = 0.0
+        for g in range(layout.num_instances):
+            hosted = layout.slot_to_expert[g]
+            hosted = np.unique(hosted[hosted >= 0])
+            a_bar = max(a_bar, expected_instance_load(probs[hosted], batch))
+    else:
+        per_inst = math.ceil(num_experts / n_e)
+        # symmetric: every instance hosts ~E/n_e distinct experts
+        a_bar = per_inst * (1.0 - (1.0 - top_k / num_experts) ** batch)
+    bound = min(capacity, a_bar + math.sqrt(2.0 * a_bar * max(math.log(n_e), 0.0)))
+    return math.ceil(bound + 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Synthetic routing traces
+# ---------------------------------------------------------------------------
+
+
+def make_routing_trace(
+    num_tokens: int,
+    num_experts: int,
+    top_k: int,
+    skew: float = 0.0,
+    seed: int = 0,
+) -> np.ndarray:
+    """Per-token top-k expert ids, [num_tokens, top_k] int32.
+
+    ``skew = 0`` → uniform routing; ``skew > 0`` → Zipf-like popularity with
+    exponent ``skew`` (hot experts emerge, as in real traces).
+    """
+    rng = np.random.default_rng(seed)
+    if skew <= 0:
+        w = np.ones(num_experts)
+    else:
+        w = 1.0 / np.power(np.arange(1, num_experts + 1), skew)
+        w = rng.permutation(w)  # hot experts at random ids
+    p = w / w.sum()
+    out = np.empty((num_tokens, top_k), np.int32)
+    for t in range(num_tokens):
+        out[t] = rng.choice(num_experts, size=top_k, replace=False, p=p)
+    return out
+
+
+def trace_expert_probs(trace: np.ndarray, num_experts: int) -> np.ndarray:
+    """Per-token activation probability p_e estimated from a trace."""
+    counts = np.bincount(trace.reshape(-1), minlength=num_experts).astype(np.float64)
+    return counts / max(1, trace.shape[0])
+
+
+def coactivation_matrix(trace: np.ndarray, num_experts: int) -> np.ndarray:
+    """a(e, e') — co-activation frequency within a token (Appendix B)."""
+    A = np.zeros((num_experts, num_experts), np.float64)
+    for row in trace:
+        for i in range(len(row)):
+            for j in range(i + 1, len(row)):
+                A[row[i], row[j]] += 1
+                A[row[j], row[i]] += 1
+    return A / max(1, trace.shape[0])
+
+
+# ---------------------------------------------------------------------------
+# Monte Carlo estimator (lookup table rebuilt periodically)
+# ---------------------------------------------------------------------------
+
+SchedulerNumpy = Callable[[np.ndarray, ReplicaLayout], Tuple[np.ndarray, np.ndarray, object]]
+
+
+@dataclasses.dataclass
+class MonteCarloAmax:
+    """\\hat a_max(n_e, B): replay B-token samples from the trace through the
+    scheduler + layout (Janus §3.5 "Monte Carlo estimator")."""
+
+    trace: np.ndarray  # [N, k] recent routing decisions
+    num_experts: int
+    trials: int = 16
+    seed: int = 0
+    scheduler: SchedulerNumpy = staticmethod(lambda e, l: aebs_numpy(e, l))
+
+    def __post_init__(self):
+        self._cache: Dict[Tuple[int, int], float] = {}
+
+    def estimate(self, layout: ReplicaLayout, batch: int) -> float:
+        key = (layout.num_instances, layout.capacity, batch, hash(layout.slot_to_expert.tobytes()))
+        if key in self._cache:
+            return self._cache[key]
+        rng = np.random.default_rng(self.seed + batch)
+        n = self.trace.shape[0]
+        vals = []
+        for _ in range(self.trials):
+            idx = rng.integers(0, n, size=min(batch, n))
+            sample = self.trace[idx]
+            _, load, _ = self.scheduler(sample, layout)
+            vals.append(int(np.max(load)))
+        est = float(np.mean(vals))
+        self._cache[key] = est
+        return est

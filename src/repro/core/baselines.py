@@ -1,0 +1,244 @@
+"""Baseline expert schedulers and system scaling policies (Janus §5.1).
+
+Schedulers (drop-in replacements for :func:`repro.core.aebs.aebs_assign`):
+
+* ``random_assign``      — MegaScale-Infer-style: uniformly random replica per
+  activated expert (the paper implements MegaScale's scheduling as "random
+  expert scheduling, a common strategy used in existing systems incl. EPLB").
+* ``token_hash_assign``  — token balancing: each (token, choice) item picks a
+  replica by hash/round-robin, equalising *token counts* per instance but not
+  distinct activated-expert counts — the foil of §2.2/R2.
+
+System scaling policies (used by the cluster simulator / Fig. 11):
+
+* ``MonolithicPolicy``   — SGLang-style: scales in whole-model tiers.
+* ``CoupledPolicy``      — MegaScale-Infer-style: restricts (n_a, n_e) to
+  plans balancing attention and MoE side times (ratio-matched), coarser grid.
+* ``FixedUnitPolicy``    — xDeepServe-style: scales in fixed 4-GPU units.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aebs import ReplicaLayout
+
+
+# ---------------------------------------------------------------------------
+# Scheduler baselines — jnp (jit-friendly; same signature as aebs_assign plus
+# an optional key for the stochastic one)
+# ---------------------------------------------------------------------------
+
+
+def random_assign(
+    eids: jax.Array,
+    tables: Dict[str, jax.Array],
+    num_instances: int,
+    key: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Uniformly random replica per activated expert (deterministic per-step
+    given ``key``; defaults to a fixed key so it stays sync-free)."""
+    hosts = tables["expert_hosts"]  # [E, R]
+    counts = tables["replica_counts"]
+    slot_of = tables["slot_of"]
+    E, R = hosts.shape
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    u = jax.random.uniform(key, (E,))
+    sel = jnp.floor(u * counts.astype(jnp.float32)).astype(jnp.int32)
+    sel = jnp.clip(sel, 0, jnp.maximum(counts - 1, 0))
+    g = jnp.take_along_axis(hosts, sel[:, None], axis=1)[:, 0]  # [E]
+    act_rep = slot_of[jnp.arange(E), jnp.maximum(g, 0)]
+    slot_ids = act_rep[eids]
+    load = _activated_load(eids, g, num_instances, E)
+    return slot_ids, load, act_rep
+
+
+def token_hash_assign(
+    eids: jax.Array,
+    tables: Dict[str, jax.Array],
+    num_instances: int,
+    key: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Token balancing: item i of expert e takes replica (i mod R(e)).
+
+    Tokens spread evenly over replicas, but every replica of an activated
+    expert tends to be touched → the distinct-expert load is *not* minimised.
+    """
+    hosts = tables["expert_hosts"]
+    counts = tables["replica_counts"]
+    slot_of = tables["slot_of"]
+    E = hosts.shape[0]
+    T, k = eids.shape
+    item = jnp.arange(T * k).reshape(T, k)
+    sel = item % jnp.maximum(counts[eids], 1)
+    g = jnp.take_along_axis(hosts[eids.reshape(-1)], sel.reshape(-1, 1), axis=1)[:, 0]
+    slot_ids = slot_of[eids.reshape(-1), jnp.maximum(g, 0)].reshape(T, k)
+    # load = distinct (expert, instance) activations per instance
+    pair = eids.reshape(-1).astype(jnp.int64) * num_instances + g.astype(jnp.int64)
+    pair_mask = jnp.zeros((E * num_instances,), bool).at[pair].set(True)
+    load = pair_mask.reshape(E, num_instances).sum(axis=0).astype(jnp.int32)
+    return slot_ids, load, jnp.full((E,), -1, jnp.int32)
+
+
+def _activated_load(eids, g_of_expert, num_instances, E):
+    act = jnp.zeros((E,), bool).at[eids.reshape(-1)].set(True)
+    return (
+        jnp.zeros((num_instances,), jnp.int32)
+        .at[jnp.maximum(g_of_expert, 0)]
+        .add(act.astype(jnp.int32))
+    )
+
+
+# ---------------------------------------------------------------------------
+# Scheduler baselines — numpy (simulator fast path)
+# ---------------------------------------------------------------------------
+
+
+def random_numpy(eids: np.ndarray, layout: ReplicaLayout, rng: np.random.Generator):
+    E, n_e = layout.num_experts, layout.num_instances
+    act = np.zeros(E, bool)
+    act[np.asarray(eids).reshape(-1)] = True
+    act_rep = -np.ones(E, np.int64)
+    load = np.zeros(n_e, np.int64)
+    for e in np.nonzero(act)[0]:
+        hs = layout.expert_hosts[e]
+        hs = hs[hs >= 0]
+        g = int(rng.choice(hs))
+        act_rep[e] = layout.slot_of[e, g]
+        load[g] += 1
+    return act_rep[np.asarray(eids)], load, act_rep
+
+
+def token_hash_numpy(eids: np.ndarray, layout: ReplicaLayout):
+    eids = np.asarray(eids)
+    T, k = eids.shape
+    flat = eids.reshape(-1)
+    item = np.arange(T * k)
+    counts = np.maximum(layout.replica_counts[flat], 1)
+    sel = item % counts
+    g = layout.expert_hosts[flat, sel]
+    slots = layout.slot_of[flat, np.maximum(g, 0)]
+    load = np.zeros(layout.num_instances, np.int64)
+    for gg in range(layout.num_instances):
+        load[gg] = len(np.unique(flat[g == gg]))
+    return slots.reshape(T, k), load, None
+
+
+# ---------------------------------------------------------------------------
+# System scaling policies (cluster simulator)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PolicyDecision:
+    n_a: int
+    n_e: int
+    total_gpus: int
+    feasible: bool
+
+
+class MonolithicPolicy:
+    """SGLang-style: whole-model replicas in power-of-two GPU tiers.
+
+    A monolithic deployment must *fit the whole model* on its tier (the
+    paper's motivating example: DeepSeek-V3 needs ≥16 H100s just to load),
+    so tiers below the model's memory floor are infeasible."""
+
+    def __init__(self, tier_sizes=(8, 16, 32, 64, 128)):
+        self.tiers = tier_sizes
+
+    def min_tier(self, scaler) -> int:
+        cfg = scaler.model.cfg
+        model_bytes = cfg.total_params() * cfg.bytes_per_param()
+        floor = model_bytes / (0.6 * scaler.model.hw.mem_bytes)  # 40% for KV/act
+        for t in self.tiers:
+            if t >= floor:
+                return t
+        return self.tiers[-1]
+
+    def decide(self, scaler, demand: float, slo: float) -> PolicyDecision:
+        lo = self.min_tier(scaler)
+        for total in self.tiers:
+            if total < lo:
+                continue
+            # monolithic: attention and MoE share the same GPUs; model as a
+            # balanced split of the tier for TPOT evaluation purposes
+            n_e = max(scaler.n_e_min, total // 2)
+            n_a = total - n_e
+            if n_a < 1:
+                continue
+            r = scaler.evaluate(demand, slo, n_a, n_e)
+            if r is not None and r.tpot <= slo:
+                return PolicyDecision(n_a, n_e, n_a + n_e, True)
+        t = self.tiers[-1]
+        n_e = max(scaler.n_e_min, t // 2)
+        return PolicyDecision(max(1, t - n_e), n_e, t, False)
+
+
+class CoupledPolicy:
+    """MegaScale-Infer-style: restrict plans to those balancing attention-side
+    and MoE-side times (for pipelined execution).  Among SLO-feasible plans it
+    picks the *most balanced* (then fewest GPUs) — which typically costs more
+    GPUs than Janus's unconstrained min-GPU search; when no balanced feasible
+    plan exists the balanced-but-violating plan with the lowest TPOT is used
+    (the Fig. 8 SLO-violation regime)."""
+
+    def __init__(self, tol: float = 0.3):
+        self.tol = tol
+
+    def _imbalance(self, r) -> float:
+        return abs(r.t_attn - r.t_moe) / max(r.t_attn, r.t_moe, 1e-12)
+
+    def decide(self, scaler, demand: float, slo: float) -> PolicyDecision:
+        balanced_feasible = []
+        feasible = []
+        violating = []
+        for n_a in range(1, scaler.n_max + 1):
+            for n_e in range(scaler.n_e_min, scaler.n_max + 1):
+                r = scaler.evaluate(demand, slo, n_a, n_e)
+                if r is None:
+                    continue
+                imb = self._imbalance(r)
+                if r.tpot <= slo:
+                    feasible.append((imb, n_a + n_e, r))
+                    if imb <= self.tol:
+                        balanced_feasible.append((n_a + n_e, imb, r))
+                elif imb <= self.tol:
+                    violating.append((r.tpot, n_a + n_e, r))
+        if balanced_feasible:
+            _, _, r = min(balanced_feasible, key=lambda t: (t[0], t[1]))
+            return PolicyDecision(r.n_a, r.n_e, r.n_a + r.n_e, True)
+        if feasible:
+            _, _, r = min(feasible, key=lambda t: (t[0], t[1]))  # most balanced
+            return PolicyDecision(r.n_a, r.n_e, r.n_a + r.n_e, True)
+        if violating:
+            _, _, r = min(violating, key=lambda t: (t[0], t[1]))
+            return PolicyDecision(r.n_a, r.n_e, r.n_a + r.n_e, False)
+        return PolicyDecision(scaler.n_max, scaler.n_max, 2 * scaler.n_max, False)
+
+
+class FixedUnitPolicy:
+    """xDeepServe-style: scale in fixed units of ``unit`` GPUs, split evenly."""
+
+    def __init__(self, unit: int = 4):
+        self.unit = unit
+
+    def decide(self, scaler, demand: float, slo: float) -> PolicyDecision:
+        total = self.unit
+        while total <= 2 * scaler.n_max:
+            n_e = max(scaler.n_e_min, total // 2)
+            n_a = total - n_e
+            if n_a < 1:
+                total += self.unit
+                continue
+            r = scaler.evaluate(demand, slo, n_a, n_e)
+            if r is not None and r.tpot <= slo:
+                return PolicyDecision(n_a, n_e, n_a + n_e, True)
+            total += self.unit
+        return PolicyDecision(scaler.n_max, scaler.n_max, 2 * scaler.n_max, False)

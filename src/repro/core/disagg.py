@@ -1,0 +1,70 @@
+"""Disaggregated cluster abstraction — Janus §3.1/§3.2 (R1).
+
+Maps the paper's two sub-clusters onto JAX device sets:
+
+* **Pool mode** (literal, used by the runnable serving engine/example): the
+  available devices are split into ``n_a`` attention devices and ``n_e`` MoE
+  devices; attention instances each hold a full attention-stack replica and a
+  KV-cache shard of the in-flight batch; MoE instances hold expert replica
+  slots.  Layer-wise exchange is an explicit device-to-device transfer
+  (the two-phase scheme decides its pattern).
+
+* **SPMD mode** (production mesh, used by the multi-pod dry-run): the
+  attention pool is the data-parallel axis group and the MoE pool is the
+  model-axis expert-parallel group; the two-phase transfer appears as a
+  hierarchically-decomposed all-gather/psum pair (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import jax
+
+from repro.core.aebs import ReplicaLayout
+
+
+@dataclasses.dataclass
+class DisaggConfig:
+    """A (n_a, n_e) deployment with its expert layout and comm scheme."""
+
+    n_attn: int
+    n_moe: int
+    layout: ReplicaLayout
+    comm_scheme: str = "2pc"  # 2pc | 1pc
+    gate_side: str = "moe"  # moe (EGate) | attn (AGate)
+
+    @property
+    def total_instances(self) -> int:
+        return self.n_attn + self.n_moe
+
+    def describe(self) -> str:
+        return f"{self.n_attn}A{self.n_moe}E"
+
+
+@dataclasses.dataclass
+class DevicePools:
+    attn_devices: List[jax.Device]
+    moe_devices: List[jax.Device]
+
+    @staticmethod
+    def split(
+        n_attn: int, n_moe: int, devices: Optional[Sequence[jax.Device]] = None
+    ) -> "DevicePools":
+        devs = list(devices if devices is not None else jax.devices())
+        if len(devs) < n_attn + n_moe:
+            raise ValueError(
+                f"need {n_attn + n_moe} devices, have {len(devs)} "
+                "(set XLA_FLAGS=--xla_force_host_platform_device_count=N)"
+            )
+        return DevicePools(devs[:n_attn], devs[n_attn : n_attn + n_moe])
+
+
+def reconfigure(
+    cfg_from: DisaggConfig, n_attn: int, n_moe: int, layout: ReplicaLayout
+) -> DisaggConfig:
+    """Incremental reconfiguration (§3.5): a new deployment object; in SPMD
+    JAX the engine re-lowers for the new pool sizes (DESIGN.md §2 —
+    'recompile-and-swap' actuation)."""
+    return dataclasses.replace(cfg_from, n_attn=n_attn, n_moe=n_moe, layout=layout)

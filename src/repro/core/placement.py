@@ -1,0 +1,155 @@
+"""Activation-aware replica allocation & placement — Janus §3.5 + Appendix B.
+
+Two stages:
+  1. :func:`allocate_replicas` — replica *counts*: S = n_e·C slots seat one
+     replica of each of the E experts, then the S−E redundant slots go
+     iteratively to the expert with the largest per-replica load
+     l(e) = c(e)/R(e).
+  2. :func:`place_replicas` — Algorithm 3: greedy min–max co-activation
+     placement with bounded swaps (the min–max assignment of Eq. 7 is NP-hard
+     via unrelated-machines scheduling, so a heuristic).
+
+Returns a :class:`repro.core.aebs.ReplicaLayout` consumed by the schedulers.
+"""
+
+from __future__ import annotations
+
+import heapq
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core.aebs import ReplicaLayout
+
+
+def allocate_replicas(
+    activation_counts: np.ndarray,  # c(e) over a sliding window
+    num_instances: int,
+    capacity: int,
+) -> np.ndarray:
+    """Replica count R(e) per expert (Appendix B "Replica count")."""
+    E = len(activation_counts)
+    total_slots = num_instances * capacity
+    if total_slots < E:
+        raise ValueError(f"{total_slots} slots cannot seat {E} experts")
+    R = np.ones(E, np.int64)
+    c = np.asarray(activation_counts, np.float64) + 1e-9
+    # max-heap on per-replica load l(e) = c(e) / R(e); an expert holds at most
+    # one replica per instance, so R(e) ≤ n_e
+    heap = [(-c[e] / 1.0, e) for e in range(E)]
+    heapq.heapify(heap)
+    extra = total_slots - E
+    while extra > 0 and heap:
+        negl, e = heapq.heappop(heap)
+        if R[e] >= num_instances:
+            continue
+        R[e] += 1
+        extra -= 1
+        if R[e] < num_instances:
+            heapq.heappush(heap, (-c[e] / R[e], e))
+    return R
+
+
+def place_replicas(
+    replica_counts: np.ndarray,  # R(e)
+    coactivation: np.ndarray,  # a(e, e') [E, E]
+    num_instances: int,
+    capacity: int,
+    loads: Optional[np.ndarray] = None,  # per-replica load l_i for ordering
+) -> ReplicaLayout:
+    """Algorithm 3: place replicas in descending load order; each goes to the
+    feasible instance with the least added co-activation pressure; when no
+    instance has both a free slot and no copy of the expert, do a bounded
+    swap."""
+    E = len(replica_counts)
+    n_e, C = num_instances, capacity
+    if replica_counts.sum() > n_e * C:
+        raise ValueError("more replicas than slots")
+
+    # replica list: (load, expert), descending load
+    if loads is None:
+        loads = np.ones(E, np.float64)
+    replicas = []
+    for e in range(E):
+        per = loads[e] / max(1, replica_counts[e])
+        replicas += [(per, e)] * int(replica_counts[e])
+    replicas.sort(key=lambda t: -t[0])
+
+    placed = [[] for _ in range(n_e)]  # experts per instance
+    slots_free = [C] * n_e
+    has = np.zeros((E, n_e), bool)
+
+    def coact_penalty(e: int, g: int) -> float:
+        return float(sum(coactivation[e, j] for j in placed[g]))
+
+    for _, e in replicas:
+        feas = [g for g in range(n_e) if slots_free[g] > 0 and not has[e, g]]
+        if feas:
+            g_star = min(feas, key=lambda g: (coact_penalty(e, g), g))
+            placed[g_star].append(e)
+            slots_free[g_star] -= 1
+            has[e, g_star] = True
+            continue
+        # no feasible slot: bounded swap (lines 11–18). Find g without e and a
+        # victim j on g, plus an instance h with a free slot that lacks j.
+        best = None  # (delta, g, j, h)
+        for g in range(n_e):
+            if has[e, g]:
+                continue
+            for j in placed[g]:
+                for h in range(n_e):
+                    if slots_free[h] <= 0 or has[j, h] or h == g:
+                        continue
+                    delta = (
+                        coact_penalty(e, g)
+                        - coactivation[e, j]  # j leaves g
+                        - sum(coactivation[j, jj] for jj in placed[g] if jj != j)
+                        + coact_penalty(j, h)
+                    )
+                    if best is None or delta < best[0]:
+                        best = (delta, g, j, h)
+        if best is None:
+            raise RuntimeError("infeasible placement (capacity exhausted)")
+        _, g, j, h = best
+        placed[g].remove(j)
+        has[j, g] = False
+        placed[g].append(e)
+        has[e, g] = True
+        placed[h].append(j)
+        slots_free[h] -= 1
+        has[j, h] = True
+
+    stx = -np.ones((n_e, C), np.int32)
+    for g in range(n_e):
+        for c_i, e in enumerate(placed[g]):
+            stx[g, c_i] = e
+    return ReplicaLayout.build(stx, E)
+
+
+def build_layout(
+    trace: np.ndarray,  # recent routing trace [N, k]
+    num_experts: int,
+    num_instances: int,
+    capacity: int,
+) -> ReplicaLayout:
+    """Counts + co-activation from a trace → allocate → place."""
+    from repro.core.amax import coactivation_matrix
+
+    counts = np.bincount(trace.reshape(-1), minlength=num_experts).astype(np.float64)
+    R = allocate_replicas(counts, num_instances, capacity)
+    A = coactivation_matrix(trace, num_experts)
+    return place_replicas(R, A, num_instances, capacity, loads=counts)
+
+
+def instance_coactivation_load(layout: ReplicaLayout, coactivation: np.ndarray) -> np.ndarray:
+    """I(g) of Eq. 6, for evaluation/benchmarks."""
+    out = np.zeros(layout.num_instances)
+    for g in range(layout.num_instances):
+        hosted = layout.slot_to_expert[g]
+        hosted = np.unique(hosted[hosted >= 0])
+        s = 0.0
+        for i in range(len(hosted)):
+            for j in range(i + 1, len(hosted)):
+                s += coactivation[hosted[i], hosted[j]]
+        out[g] = s
+    return out

@@ -1,0 +1,153 @@
+"""AEBS as a Pallas TPU kernel — the paper's §3.4 GPU kernel, TPU-native.
+
+Design (DESIGN.md §6): the scheduling workflow is two ``pallas_call``s.
+
+Kernel 1 (``_collect_and_greedy``) — grid over token blocks:
+  * stage 1 (token-parallel, VPU): each block folds its activated-expert
+    bitmap into a VMEM scratch accumulator via max (grid iterations on TPU
+    run sequentially per core, so scratch accumulation is well-defined);
+  * stage 2 (sequential, final grid step only): the greedy two-pass replica
+    selection of Algorithm 1 over ≤E experts (E ≤ 512 — a scalar-ish loop,
+    negligible next to the MoE GEMMs), producing ``act_rep`` and ``load``.
+
+Kernel 2 (``_rewrite``) — grid over token blocks: rewrite per-token logical
+EIDs to physical replica slots.  The gather is expressed as a one-hot matmul
+(MXU-friendly, avoids relying on dynamic-gather lowering support).
+
+Both run identically on every MoE shard — Janus's synchronisation-free
+redundant-compute trick carries over unchanged.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+def _collect_and_greedy_kernel(
+    eids_ref,  # [TB, k] int32 block (padded items = -1)
+    hosts_ref,  # [E, R] int32
+    counts_ref,  # [E, 1] int32
+    slot_of_ref,  # [E, n_e] int32
+    actrep_ref,  # out [E, 1] int32
+    load_ref,  # out [n_e, 1] int32
+    act_scratch,  # VMEM scratch [E, 1] int32
+    *,
+    num_blocks: int,
+):
+    i = pl.program_id(0)
+    E = hosts_ref.shape[0]
+    n_e = slot_of_ref.shape[1]
+
+    @pl.when(i == 0)
+    def _init():
+        act_scratch[...] = jnp.zeros_like(act_scratch)
+
+    # ---- stage 1: token-parallel activation bitmap ----
+    blk = eids_ref[...]  # [TB, k]
+    eye = jax.lax.broadcasted_iota(jnp.int32, (1, 1, E), 2)
+    hits = (blk[:, :, None] == eye).any(axis=(0, 1))  # [E] bool
+    act_scratch[...] = jnp.maximum(act_scratch[...], hits.astype(jnp.int32)[:, None])
+
+    # ---- stage 2: greedy two-pass assignment (Algorithm 1), last block ----
+    @pl.when(i == num_blocks - 1)
+    def _greedy():
+        act = act_scratch[...][:, 0]  # [E]
+        hosts = hosts_ref[...]  # [E, R]
+        counts = counts_ref[...][:, 0]  # [E]
+        slot_of = slot_of_ref[...]  # [E, n_e]
+
+        def assign_pass(carry, want_multi):
+            def body(e, c):
+                load, rep = c
+                is_multi = counts[e] > 1
+                eligible = (act[e] > 0) & (is_multi == want_multi) & (counts[e] >= 1)
+                row = hosts[e]  # [R]
+                row_load = jnp.where(row >= 0, load[jnp.maximum(row, 0)], jnp.int32(2**30))
+                sel = jnp.argmin(row_load)
+                g = jnp.maximum(row[sel], 0)
+                slot = slot_of[e, g]
+                load = jnp.where(eligible, load.at[g].add(1), load)
+                rep = rep.at[e].set(jnp.where(eligible, slot, rep[e]))
+                return (load, rep)
+
+            return jax.lax.fori_loop(0, E, body, carry)
+
+        load0 = jnp.zeros((n_e,), jnp.int32)
+        rep0 = jnp.full((E,), -1, jnp.int32)
+        load1, rep1 = assign_pass((load0, rep0), False)
+        load2, rep2 = assign_pass((load1, rep1), True)
+        actrep_ref[...] = rep2[:, None]
+        load_ref[...] = load2[:, None]
+
+
+def _rewrite_kernel(eids_ref, actrep_ref, out_ref):
+    """slot_ids = act_rep[eids] via one-hot matmul (exact for values < 2^24)."""
+    blk = eids_ref[...]  # [TB, k]
+    E = actrep_ref.shape[0]
+    tb, k = blk.shape
+    eye = jax.lax.broadcasted_iota(jnp.int32, (tb * k, E), 1)
+    oh = (blk.reshape(tb * k, 1) == eye).astype(jnp.float32)
+    rep = actrep_ref[...][:, 0].astype(jnp.float32)  # [E]
+    vals = jnp.dot(oh, rep[:, None], preferred_element_type=jnp.float32)  # [tb*k, 1]
+    invalid = blk.reshape(tb * k, 1) < 0
+    out = jnp.where(invalid, -1.0, vals).astype(jnp.int32)
+    out_ref[...] = out.reshape(tb, k)
+
+
+def aebs_pallas(
+    eids: jax.Array,  # [T, k] int32 (pad items with -1)
+    hosts: jax.Array,  # [E, R]
+    counts: jax.Array,  # [E]
+    slot_of: jax.Array,  # [E, n_e]
+    *,
+    block_tokens: int = 256,
+    interpret: bool = True,
+):
+    """Returns (slot_ids [T, k], load [n_e], act_rep [E])."""
+    T, k = eids.shape
+    E, n_e = slot_of.shape
+    TB = min(block_tokens, T)
+    pad = (-T) % TB
+    if pad:
+        eids = jnp.concatenate([eids, jnp.full((pad, k), -1, jnp.int32)], axis=0)
+    Tp = eids.shape[0]
+    num_blocks = Tp // TB
+
+    actrep, load = pl.pallas_call(
+        functools.partial(_collect_and_greedy_kernel, num_blocks=num_blocks),
+        grid=(num_blocks,),
+        in_specs=[
+            pl.BlockSpec((TB, k), lambda i: (i, 0)),
+            pl.BlockSpec((E, hosts.shape[1]), lambda i: (0, 0)),
+            pl.BlockSpec((E, 1), lambda i: (0, 0)),
+            pl.BlockSpec((E, n_e), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((E, 1), lambda i: (0, 0)),
+            pl.BlockSpec((n_e, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((E, 1), jnp.int32),
+            jax.ShapeDtypeStruct((n_e, 1), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((E, 1), jnp.int32)],
+        interpret=interpret,
+    )(eids, hosts, counts[:, None], slot_of)
+
+    slot_ids = pl.pallas_call(
+        _rewrite_kernel,
+        grid=(num_blocks,),
+        in_specs=[
+            pl.BlockSpec((TB, k), lambda i: (i, 0)),
+            pl.BlockSpec((E, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((TB, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Tp, k), jnp.int32),
+        interpret=interpret,
+    )(eids, actrep)
+
+    return slot_ids[:T], load[:, 0], actrep[:, 0]

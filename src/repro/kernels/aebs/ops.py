@@ -1,0 +1,37 @@
+"""Jit'd public wrapper for the AEBS kernel.
+
+On CPU (this container) the kernel body executes via ``interpret=True``;
+on TPU it compiles to Mosaic.  The wrapper handles padding and exposes the
+same (slot_ids, load, act_rep) contract as ``repro.core.aebs.aebs_assign``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.aebs.kernel import aebs_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("num_instances", "block_tokens"))
+def aebs_schedule(
+    eids: jax.Array,
+    tables: Dict[str, jax.Array],
+    num_instances: int,
+    block_tokens: int = 256,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    return aebs_pallas(
+        eids,
+        tables["expert_hosts"],
+        tables["replica_counts"],
+        tables["slot_of"],
+        block_tokens=block_tokens,
+        interpret=not _on_tpu(),
+    )

@@ -1,0 +1,52 @@
+"""Pure-jnp oracle for the AEBS Pallas kernel.
+
+Semantics are exactly :func:`repro.core.aebs.aebs_assign` (Algorithm 1), with
+the kernel's -1-padded-item convention added: padded items (eid < 0) do not
+activate experts and map to slot -1.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aebs import aebs_assign
+
+
+def aebs_ref(eids: jax.Array, hosts: jax.Array, counts: jax.Array, slot_of: jax.Array):
+    """Returns (slot_ids [T,k], load [n_e], act_rep [E])."""
+    n_e = slot_of.shape[1]
+    valid = eids >= 0
+    safe = jnp.where(valid, eids, 0)
+    # mask padded rows out of the activation union by pointing them at an
+    # impossible value: rebuild activation from valid entries only
+    tables = {"expert_hosts": hosts, "replica_counts": counts, "slot_of": slot_of}
+    # aebs_assign builds the activated set from all entries; neutralise pads
+    # by replacing them with a valid eid *only if* that eid is independently
+    # activated — instead, do it exactly: compute with a filtered scatter.
+    E = hosts.shape[0]
+    act = jnp.zeros(E, bool).at[jnp.where(valid, eids, E)].set(True, mode="drop")
+
+    # re-implement the two passes against the explicit activation mask
+    def assign_pass(carry, want_multi):
+        def body(e, c):
+            load, rep = c
+            is_multi = counts[e] > 1
+            eligible = act[e] & (is_multi == want_multi) & (counts[e] >= 1)
+            row = hosts[e]
+            row_load = jnp.where(row >= 0, load[jnp.maximum(row, 0)], jnp.int32(2**30))
+            sel = jnp.argmin(row_load)
+            g = jnp.maximum(row[sel], 0)
+            slot = slot_of[e, g]
+            load = jnp.where(eligible, load.at[g].add(1), load)
+            rep = rep.at[e].set(jnp.where(eligible, slot, rep[e]))
+            return (load, rep)
+
+        return jax.lax.fori_loop(0, E, body, carry)
+
+    load0 = jnp.zeros((n_e,), jnp.int32)
+    rep0 = jnp.full((E,), -1, jnp.int32)
+    l1, r1 = assign_pass((load0, rep0), False)
+    l2, r2 = assign_pass((l1, r1), True)
+    slot_ids = jnp.where(valid, r2[safe], -1)
+    return slot_ids, l2, r2

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the flash-decode attention kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(
+    q: jax.Array,  # [B, nh, hd]
+    k_cache: jax.Array,  # [B, S, nkv, hd]
+    v_cache: jax.Array,
+    valid_len: jax.Array,  # scalar
+    logit_cap: float = 0.0,
+) -> jax.Array:
+    B, nh, hd = q.shape
+    S, nkv = k_cache.shape[1], k_cache.shape[2]
+    G = nh // nkv
+    qg = q.reshape(B, nkv, G, hd).astype(jnp.float32)
+    k = k_cache.astype(jnp.float32)
+    v = v_cache.astype(jnp.float32)
+    s = jnp.einsum("bngh,bsnh->bngs", qg, k) * (hd**-0.5)
+    if logit_cap > 0.0:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+    mask = jnp.arange(S) < valid_len
+    s = jnp.where(mask[None, None, None, :], s, -1.0e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bngs,bsnh->bngh", p, v)
+    return o.reshape(B, nh, hd).astype(q.dtype)
+
+
+def decode_attention_int8_ref(q, k_cache, v_cache, k_scale, v_scale, valid_len, logit_cap: float = 0.0):
+    """Oracle: dequantise the int8 cache, then full-precision attention."""
+    k = k_cache.astype(jnp.float32) * k_scale[..., None].astype(jnp.float32)
+    v = v_cache.astype(jnp.float32) * v_scale[..., None].astype(jnp.float32)
+    return decode_attention_ref(q, k.astype(q.dtype), v.astype(q.dtype), valid_len, logit_cap)

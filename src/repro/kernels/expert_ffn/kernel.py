@@ -1,0 +1,86 @@
+"""Grouped expert-FFN Pallas kernel — the MoE hot loop (§2.2 / Fig. 2).
+
+The paper's central performance fact is that MoE-layer latency is set by the
+number of *distinct activated experts* per instance, because each activated
+expert's weights must be streamed from HBM regardless of its token count.
+This kernel makes that structure explicit on TPU:
+
+  grid = (num_slots, d_ff_tiles)
+  * inactive expert slots are skipped entirely via ``@pl.when`` — no weight
+    streaming, no FLOPs: per-instance time ∝ activated-slot count, exactly
+    the β·a_max model of Eq. 1c;
+  * active slots run a double GEMM (gate/up) + SwiGLU + down-projection over
+    their capacity-packed token block, tiled along d_ff so every working set
+    fits VMEM with MXU-aligned (multiples of 128) matmul dims;
+  * the down-projection accumulates across d_ff tiles into the output block
+    (the d_ff grid axis iterates innermost → sequential on TPU).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _expert_ffn_kernel(
+    active_ref,  # [1, 1] int32 — is this slot activated?
+    x_ref,  # [1, CAP, d]
+    wg_ref,  # [1, d, FT]
+    wu_ref,  # [1, d, FT]
+    wd_ref,  # [1, FT, d]
+    out_ref,  # [1, CAP, d]
+    *,
+    num_ff_tiles: int,
+):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    @pl.when(active_ref[0, 0] > 0)
+    def _compute():
+        x = x_ref[0]  # [CAP, d]
+        g = jnp.dot(x, wg_ref[0], preferred_element_type=jnp.float32)
+        u = jnp.dot(x, wu_ref[0], preferred_element_type=jnp.float32)
+        h = (jax.nn.silu(g) * u).astype(x.dtype)  # [CAP, FT]
+        acc = jnp.dot(h, wd_ref[0], preferred_element_type=jnp.float32)
+        out_ref[0] = (out_ref[0].astype(jnp.float32) + acc).astype(out_ref.dtype)
+
+
+def expert_ffn_pallas(
+    x: jax.Array,  # [S, CAP, d] capacity-packed tokens per slot
+    w_gate: jax.Array,  # [S, d, f]
+    w_up: jax.Array,  # [S, d, f]
+    w_down: jax.Array,  # [S, f, d]
+    active: jax.Array,  # [S] int32/bool — slot activation bitmap
+    *,
+    ff_tile: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    """SwiGLU expert FFN per slot; inactive slots yield zeros."""
+    S, CAP, d = x.shape
+    f = w_gate.shape[-1]
+    FT = min(ff_tile, f)
+    if f % FT:
+        raise ValueError(f"d_ff={f} not divisible by ff_tile={FT}")
+    nft = f // FT
+    active = active.astype(jnp.int32).reshape(S, 1)
+
+    return pl.pallas_call(
+        functools.partial(_expert_ffn_kernel, num_ff_tiles=nft),
+        grid=(S, nft),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda s, j: (s, 0)),
+            pl.BlockSpec((1, CAP, d), lambda s, j: (s, 0, 0)),
+            pl.BlockSpec((1, d, FT), lambda s, j: (s, 0, j)),
+            pl.BlockSpec((1, d, FT), lambda s, j: (s, 0, j)),
+            pl.BlockSpec((1, FT, d), lambda s, j: (s, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, CAP, d), lambda s, j: (s, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((S, CAP, d), x.dtype),
+        interpret=interpret,
+    )(active, x, w_gate, w_up, w_down)

@@ -1,0 +1,24 @@
+"""Jit'd wrapper for the grouped expert-FFN kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.expert_ffn.kernel import expert_ffn_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("ff_tile",))
+def expert_ffn(x, w_gate, w_up, w_down, active, ff_tile: int = 512):
+    f = w_gate.shape[-1]
+    ft = ff_tile
+    while f % ft:
+        ft //= 2
+    return expert_ffn_pallas(
+        x, w_gate, w_up, w_down, active, ff_tile=ft, interpret=not _on_tpu()
+    )

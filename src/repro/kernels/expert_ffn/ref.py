@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the grouped expert-FFN kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def expert_ffn_ref(
+    x: jax.Array,  # [S, CAP, d]
+    w_gate: jax.Array,  # [S, d, f]
+    w_up: jax.Array,
+    w_down: jax.Array,  # [S, f, d]
+    active: jax.Array,  # [S]
+) -> jax.Array:
+    g = jnp.einsum("scd,sdf->scf", x, w_gate, preferred_element_type=jnp.float32)
+    u = jnp.einsum("scd,sdf->scf", x, w_up, preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(g) * u).astype(x.dtype)
+    y = jnp.einsum("scf,sfd->scd", h, w_down, preferred_element_type=jnp.float32)
+    mask = (active.astype(jnp.int32) > 0)[:, None, None]
+    return jnp.where(mask, y, 0.0).astype(x.dtype)

@@ -1,0 +1,62 @@
+"""Serving launcher: run the continuous-batching engine (CPU-scale, reduced
+configs) with the Janus scheduled-MoE path and the autoscaling controller.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-moe-a2.7b \
+        --rate 20 --duration 2 --scheduler aebs
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-moe-a2.7b")
+    ap.add_argument("--rate", type=float, default=20.0, help="requests/s")
+    ap.add_argument("--duration", type=float, default=2.0, help="seconds of arrivals")
+    ap.add_argument("--scheduler", default="aebs", choices=["aebs", "random", "token_hash", "none"])
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--cache-len", type=int, default=256)
+    ap.add_argument("--n-instances", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=0, help="expert slots per instance")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.core.amax import make_routing_trace
+    from repro.core.placement import build_layout
+    from repro.models import model as model_mod
+    from repro.serving.engine import ServingEngine
+    from repro.serving.request import WorkloadSpec, sample_requests
+    from repro.serving.trace import poisson_arrivals
+
+    cfg = get_config(args.arch + "-reduced")
+    params = model_mod.init_params(cfg, args.seed)
+    layout = None
+    if cfg.has_moe and args.scheduler != "none":
+        C = args.slots or (cfg.num_experts // args.n_instances + 1)
+        trace = make_routing_trace(2048, cfg.num_experts, cfg.top_k, skew=0.8, seed=args.seed)
+        layout = build_layout(trace, cfg.num_experts, args.n_instances, C)
+    spec = WorkloadSpec(
+        mean_input=8, mean_output=24, vocab_size=cfg.vocab_size, max_input=48, max_output=64
+    )
+    reqs = sample_requests(spec, poisson_arrivals(args.rate, args.duration, args.seed), with_prompts=True)
+    eng = ServingEngine(
+        cfg,
+        params,
+        max_batch=args.max_batch,
+        cache_len=args.cache_len,
+        layout=layout,
+        scheduler=args.scheduler,
+    )
+    print(f"serving {len(reqs)} requests on {cfg.name} (scheduler={args.scheduler})")
+    m = eng.run(reqs)
+    for k, v in m.items():
+        print(f"  {k:20s} {v:.4f}" if isinstance(v, float) else f"  {k:20s} {v}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,326 @@
+"""Distributed step builders: train_step / prefill_step / serve_step bound to
+a mesh with full parameter+input shardings.
+
+These are what the multi-pod dry-run lowers and what a real deployment would
+dispatch.  MoE layers use the expert-parallel shard_map path
+(``repro.models.moe_ep``): ``logical`` mode for train/prefill, ``scheduled``
+(AEBS over replica slots) for decode — the Janus serving path as a
+first-class feature of the step function."""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig, input_specs
+from repro.core.aebs import ReplicaLayout, aebs_assign
+from repro.models import model as model_mod
+from repro.models import transformer
+from repro.sharding.rules import batch_axes, input_pspecs, param_pspecs
+from repro.training.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(lambda: model_mod.init_params(cfg, 0))
+
+
+def serving_layout(cfg: ModelConfig, n_instances: int) -> ReplicaLayout:
+    """Default production layout: n_e = model-axis size, capacity chosen so
+    every expert is seated with ≥ n_e·C − E redundant replica slots."""
+    C = math.ceil((cfg.num_experts + 1) / n_instances) + 0
+    C = max(C, math.ceil(cfg.num_experts / n_instances))
+    if n_instances * C == cfg.num_experts:
+        C += 1  # guarantee some replication headroom
+    return ReplicaLayout.round_robin(cfg.num_experts, n_instances, C)
+
+
+def materialize_slot_params(params, cfg: ModelConfig, slot_to_expert):
+    """Pin replica-slot expert weights (Janus: placement pins replicas in
+    device memory at reconfiguration time).  Expert leaves [.., E, d, f]
+    become [.., S_total, d, f]; everything else is untouched."""
+    import jax.numpy as jnp
+
+    idx = jnp.maximum(jnp.asarray(slot_to_expert), 0)
+
+    def walk(path, leaf):
+        names = [str(getattr(p, "key", getattr(p, "idx", ""))) for p in path]
+        if (
+            "moe" in names
+            and "shared" not in names  # shared-expert FFN is not slotted
+            and names[-1] in ("w_gate", "w_up", "w_down")
+        ):
+            # stacked blocks have a leading n_periods axis
+            axis = 1 if "blocks" in names else 0
+            return jnp.take(leaf, idx, axis=axis)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(walk, params)
+
+
+def pad_attention_heads(params, cfg: ModelConfig, n_model: int):
+    """Pad query heads up to a multiple of the model-axis size so attention
+    shards by head instead of falling back to d_model-contraction sharding
+    (which costs an extra full-activation psum per layer — §Perf iteration
+    Y1, yi-34b: 56 → 64 heads).  Padded wo rows are zero, so outputs are
+    exact; num_kv_heads is untouched (GQA group size grows)."""
+    import jax.numpy as jnp
+
+    nh = cfg.num_heads
+    if nh == 0 or nh % n_model == 0 or cfg.num_kv_heads == 0:
+        return params
+    if nh % cfg.num_kv_heads:
+        return params
+    nkv = cfg.num_kv_heads
+    # heads are grouped kv-major: [kv0:(q0..qg-1), kv1:(...)] — pad *within*
+    # each group so _group_q's reshape keeps q↔kv associations intact
+    lcm = n_model * nkv // math.gcd(n_model, nkv)
+    target = ((nh + lcm - 1) // lcm) * lcm
+    g_old, g_new = nh // nkv, target // nkv
+    pad_g = g_new - g_old
+
+    def walk(path, leaf):
+        names = [str(getattr(p, "key", getattr(p, "idx", ""))) for p in path]
+        off = 1 if "blocks" in names or "encoder" in names else 0
+        if names[-1] == "wq":
+            # [.., d, nh, hd] -> [.., d, nkv, g, hd] -> pad g -> back
+            sh = leaf.shape
+            w = leaf.reshape(*sh[: off + 1], nkv, g_old, sh[-1])
+            w = jnp.pad(w, [(0, 0)] * (off + 2) + [(0, pad_g), (0, 0)])
+            return w.reshape(*sh[: off + 1], target, sh[-1])
+        if names[-1] == "wo":
+            # [.., nh, hd, d] -> [.., nkv, g, hd, d] -> pad g (zeros!) -> back
+            sh = leaf.shape
+            w = leaf.reshape(*sh[:off], nkv, g_old, *sh[off + 1 :])
+            w = jnp.pad(w, [(0, 0)] * (off + 1) + [(0, pad_g), (0, 0), (0, 0)])
+            return w.reshape(*sh[:off], target, *sh[off + 1 :])
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(walk, params)
+
+
+def make_moe_ctx(
+    cfg: ModelConfig, mesh, mode: str, scheduler=aebs_assign, fsdp: bool = False
+) -> Optional[Dict]:
+    if not cfg.has_moe:
+        return None
+    n_model = mesh.shape["model"]
+    ctx: Dict[str, Any] = dict(
+        dispatch="ep",
+        ep_ctx=dict(
+            mesh=mesh, dp_axes=batch_axes(mesh), model_axis="model", mode=mode, fsdp=fsdp
+        ),
+    )
+    if mode == "scheduled":
+        layout = serving_layout(cfg, n_model)
+        ctx.update(
+            scheduler=scheduler,
+            layout_tables=layout.device_tables(),
+            slot_to_expert=jnp.asarray(layout.slot_to_expert.reshape(-1)),
+            num_instances=n_model,
+        )
+    return ctx
+
+
+def _ns(mesh, tree_pspecs):
+    return jax.tree.map(
+        lambda p: NamedSharding(mesh, p),
+        tree_pspecs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def _extra_inputs(cfg: ModelConfig, specs: Dict[str, jax.ShapeDtypeStruct]) -> Tuple[Dict, Dict]:
+    """Split the input-spec dict into (model extras, remaining)."""
+    extras = {k: specs[k] for k in ("encoder_frames", "patch_embeds") if k in specs}
+    rest = {k: v for k, v in specs.items() if k not in extras}
+    return extras, rest
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+
+
+def build_train_step(cfg: ModelConfig, mesh, shape: InputShape, opt_cfg: Optional[AdamWConfig] = None):
+    """Returns (jitted step, example abstract args)."""
+    opt_cfg = opt_cfg or AdamWConfig()
+    specs = input_specs(cfg, shape)
+    extras_abs, rest = _extra_inputs(cfg, specs)
+    moe_ctx = make_moe_ctx(cfg, mesh, "logical")
+
+    params_abs = abstract_params(cfg)
+    n_model = mesh.shape["model"]
+    if cfg.num_heads and cfg.num_heads % n_model:
+        # §Perf Y1: head padding → head-sharded attention, one less psum/layer
+        params_abs = jax.eval_shape(
+            lambda p: pad_attention_heads(p, cfg, n_model), params_abs
+        )
+    opt_abs = jax.eval_shape(init_opt_state, params_abs)
+    # ZeRO-1: parameters replicated across the data axes for compute (TP over
+    # the model axis only), optimizer moments fully sharded (data × model).
+    # The update step then lowers to reduce-scatter(grads) → sharded update →
+    # all-gather(params) — without the gather-hoisting blowup full FSDP
+    # suffers inside scan-over-layers (EXPERIMENTS.md §Perf, iteration 0).
+    p_pspecs = param_pspecs(cfg, params_abs, mesh, fsdp=False)
+    m_pspecs = param_pspecs(cfg, params_abs, mesh, fsdp=True)
+    opt_pspecs = type(opt_abs)(P(), m_pspecs, m_pspecs)
+    in_pspecs = input_pspecs(cfg, shape, specs, mesh)
+
+    # §Perf Y3 applies to attention-stack archs only: recurrent (ssm/hybrid)
+    # layers consume the sequence serially, so a seq-sharded residual just
+    # adds all-gather/reduce-scatter churn (measured: zamba2 train collective
+    # bytes +63% — refinement Z2/Y3b)
+    seq_ok = (
+        shape.seq_len % mesh.shape["model"] == 0
+        and not cfg.has_moe
+        and cfg.family not in ("ssm", "hybrid")
+    )
+    act_ns = NamedSharding(
+        mesh, P(in_pspecs["tokens"][0], "model" if seq_ok else None, None)
+    )
+
+    def train_step(params, opt_state, batch):
+        extra = {k: batch[k] for k in extras_abs}
+        if moe_ctx:
+            extra["moe_ctx"] = moe_ctx
+        # §Perf Y3: sequence-parallel residual stream between layer periods
+        # (psum → reduce-scatter + all-gather pair, halving on-wire bytes)
+        extra["act_constraint"] = lambda x: jax.lax.with_sharding_constraint(x, act_ns)
+
+        def loss(p):
+            return model_mod.loss_fn(
+                p, batch["tokens"], batch["labels"], cfg,
+                extra=extra or None, remat=True, xent_chunk=512,
+            )
+
+        (l, _aux), grads = jax.value_and_grad(loss, has_aux=True)(params)
+        # ZeRO-1 dataflow (§Perf Y2): constrain grads to the moments' sharding
+        # so XLA reduce-scatters the bf16 grads instead of all-gathering the
+        # f32 moments (3× tensors, 2× bytes each) to the replicated layout.
+        grads = jax.lax.with_sharding_constraint(grads, _ns(mesh, m_pspecs))
+        new_params, new_opt, info = adamw_update(opt_cfg, params, grads, opt_state)
+        return new_params, new_opt, {"loss": l, "grad_norm": info["grad_norm"]}
+
+    batch_abs = dict(rest, **extras_abs)
+    batch_sh = {k: NamedSharding(mesh, in_pspecs[k]) for k in batch_abs}
+    step = jax.jit(
+        train_step,
+        in_shardings=(_ns(mesh, p_pspecs), _ns(mesh, opt_pspecs), batch_sh),
+        out_shardings=(_ns(mesh, p_pspecs), _ns(mesh, opt_pspecs), None),
+        donate_argnums=(0, 1),
+    )
+    return step, (params_abs, opt_abs, batch_abs)
+
+
+# ---------------------------------------------------------------------------
+# Prefill step
+# ---------------------------------------------------------------------------
+
+
+def build_prefill_step(cfg: ModelConfig, mesh, shape: InputShape):
+    specs = input_specs(cfg, shape)
+    extras_abs, rest = _extra_inputs(cfg, specs)
+    moe_ctx = make_moe_ctx(cfg, mesh, "logical")
+    params_abs = abstract_params(cfg)
+    n_model = mesh.shape["model"]
+    if cfg.num_heads and cfg.num_heads % n_model:
+        params_abs = jax.eval_shape(
+            lambda p: pad_attention_heads(p, cfg, n_model), params_abs
+        )
+    p_pspecs = param_pspecs(cfg, params_abs, mesh)
+    in_pspecs = input_pspecs(cfg, shape, specs, mesh)
+    # caches produced by prefill follow the decode cache shardings
+    decode_shape = InputShape(shape.name, shape.seq_len, shape.global_batch, "decode")
+    cache_specs = input_specs(cfg, decode_shape)
+    cache_pspecs = input_pspecs(cfg, decode_shape, cache_specs, mesh)
+
+    def prefill_step(params, batch):
+        extra = {k: batch[k] for k in extras_abs}
+        if moe_ctx:
+            extra["moe_ctx"] = moe_ctx
+        logits, caches = model_mod.prefill(
+            params, batch["tokens"], cfg, cache_len=shape.seq_len, extra=extra or None
+        )
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, caches
+
+    batch_abs = dict(rest, **extras_abs)
+    batch_sh = {k: NamedSharding(mesh, in_pspecs[k]) for k in batch_abs}
+    cache_sh = {
+        k: NamedSharding(mesh, cache_pspecs[k])
+        for k in cache_specs
+        if k not in ("tokens", "cache_index")
+    }
+    step = jax.jit(
+        prefill_step,
+        in_shardings=(_ns(mesh, p_pspecs), batch_sh),
+        out_shardings=(NamedSharding(mesh, P(cache_pspecs["tokens"][0])), cache_sh),
+    )
+    return step, (params_abs, batch_abs)
+
+
+# ---------------------------------------------------------------------------
+# Serve (decode) step
+# ---------------------------------------------------------------------------
+
+
+def build_serve_step(
+    cfg: ModelConfig, mesh, shape: InputShape, scheduler=aebs_assign, unroll: bool = True
+):
+    """One new token with a KV cache of shape.seq_len — the Janus decode path."""
+    specs = input_specs(cfg, shape)
+    moe_ctx = make_moe_ctx(cfg, mesh, "scheduled", scheduler)
+    params_abs = abstract_params(cfg)
+    if moe_ctx is not None:
+        stx = moe_ctx["slot_to_expert"]
+        params_abs = jax.eval_shape(
+            lambda p: materialize_slot_params(p, cfg, stx), params_abs
+        )
+    p_pspecs = param_pspecs(cfg, params_abs, mesh)
+    in_pspecs = input_pspecs(cfg, shape, specs, mesh)
+
+    cache_keys = [k for k in specs if k not in ("tokens", "cache_index")]
+
+    def serve_step(params, tokens, cache_index, caches):
+        extra = {"moe_ctx": moe_ctx} if moe_ctx else None
+        logits, new_caches = model_mod.decode_step(
+            params, tokens, caches, cache_index, cfg, extra=extra, unroll=unroll
+        )
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, new_caches
+
+    caches_abs = {k: specs[k] for k in cache_keys}
+    cache_sh = {k: NamedSharding(mesh, in_pspecs[k]) for k in cache_keys}
+    step = jax.jit(
+        serve_step,
+        in_shardings=(
+            _ns(mesh, p_pspecs),
+            NamedSharding(mesh, in_pspecs["tokens"]),
+            NamedSharding(mesh, P()),
+            cache_sh,
+        ),
+        out_shardings=(
+            NamedSharding(mesh, P(in_pspecs["tokens"][0])),
+            cache_sh,
+        ),
+        donate_argnums=(3,),
+    )
+    abs_args = (
+        params_abs,
+        specs["tokens"],
+        specs["cache_index"],
+        caches_abs,
+    )
+    return step, abs_args
+
+
+BUILDERS = {
+    "train": build_train_step,
+    "prefill": build_prefill_step,
+    "decode": build_serve_step,
+}

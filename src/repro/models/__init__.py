@@ -1,0 +1,3 @@
+"""Model zoo: functional JAX implementations of every supported family."""
+
+from repro.models import attention, common, ffn, model, moe, ssm, transformer  # noqa: F401

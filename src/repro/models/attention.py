@@ -1,0 +1,231 @@
+"""Grouped-query attention with full, sliding-window, cross and decode paths.
+
+Layouts (einsum-first, SPMD-friendly):
+  q proj:  [d_model, n_heads,   head_dim]
+  k/v:     [d_model, n_kv_heads, head_dim]
+  o proj:  [n_heads, head_dim, d_model]
+  caches:  [batch, cache_len, n_kv_heads, head_dim]
+
+GQA is expressed by reshaping q heads into (kv_head, q_per_kv) groups so the
+head axis stays shardable by kv-head.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Params, apply_rope, dense_init, softcap, split_keys
+
+NEG_INF = -2.0e38
+
+
+def init_attention(cfg, key, dtype=jnp.bfloat16) -> Params:
+    d, nh, nkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    k1, k2, k3, k4 = split_keys(key, 4)
+    return {
+        "wq": dense_init(k1, (d, nh, hd), fan_in=d, dtype=dtype),
+        "wk": dense_init(k2, (d, nkv, hd), fan_in=d, dtype=dtype),
+        "wv": dense_init(k3, (d, nkv, hd), fan_in=d, dtype=dtype),
+        "wo": dense_init(k4, (nh, hd, d), fan_in=nh * hd, dtype=dtype),
+    }
+
+
+def _group_q(q: jax.Array, n_kv: int) -> jax.Array:
+    """[b, s, nh, hd] -> [b, s, n_kv, q_per_kv, hd]."""
+    b, s, nh, hd = q.shape
+    return q.reshape(b, s, n_kv, nh // n_kv, hd)
+
+
+def _attend(
+    q: jax.Array,  # [b, sq, n_kv, g, hd]
+    k: jax.Array,  # [b, sk, n_kv, hd]
+    v: jax.Array,  # [b, sk, n_kv, hd]
+    mask: jax.Array,  # broadcastable to [b, n_kv, g, sq, sk] (bool, True=keep)
+    logit_cap: Optional[float],
+) -> jax.Array:
+    hd = q.shape[-1]
+    scale = hd**-0.5
+    scores = jnp.einsum("bsngh,btnh->bngst", q, k, preferred_element_type=jnp.float32)
+    scores = scores * scale
+    if logit_cap is not None:
+        scores = logit_cap * jnp.tanh(scores / logit_cap)
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bngst,btnh->bsngh", probs, v)
+    b, sq, n_kv, g, hd = out.shape
+    return out.reshape(b, sq, n_kv * g, hd)
+
+
+CHUNK_THRESHOLD = 2048  # switch to q-chunked attention above this seq length
+Q_CHUNK = 256
+
+
+def _attend_qchunked(
+    qg: jax.Array,  # [b, s, n_kv, g, hd]
+    k: jax.Array,  # [b, s, n_kv, hd]
+    v: jax.Array,
+    causal: bool,
+    window: Optional[int],
+    logit_cap: Optional[float],
+    q_chunk: int = Q_CHUNK,
+) -> jax.Array:
+    """Memory-bounded attention: queries processed in checkpointed chunks so
+    only an O(s·q_chunk) score block is ever live (the O(s²) f32 score tensor
+    of the naive path dominates training memory at 4k–32k sequence lengths —
+    see EXPERIMENTS.md §Perf)."""
+    b, s, n_kv, g, hd = qg.shape
+    qc = min(q_chunk, s)
+    if s % qc:
+        mask = None  # fallback handled by caller
+        raise ValueError(f"seq {s} not divisible by q_chunk {qc}")
+    nchunks = s // qc
+    qg_c = qg.reshape(b, nchunks, qc, n_kv, g, hd).transpose(1, 0, 2, 3, 4, 5)
+    sk = jnp.arange(s)[None, :]
+
+    @jax.checkpoint
+    def one_chunk(args):
+        qi, idx = args  # qi [b, qc, n_kv, g, hd]
+        sq = idx * qc + jnp.arange(qc)[:, None]
+        m = jnp.ones((qc, s), bool) if not causal else (sk <= sq)
+        if window is not None:
+            m = m & (sk > sq - window)
+        return _attend(qi, k, v, m[None, None, None], logit_cap)  # [b, qc, nh, hd]
+
+    outs = jax.lax.map(one_chunk, (qg_c, jnp.arange(nchunks)))
+    # [nchunks, b, qc, nh, hd] -> [b, s, nh, hd]
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, s, n_kv * g, hd)
+
+
+def attention_full(
+    params: Params,
+    x: jax.Array,  # [b, s, d]
+    cfg,
+    positions: Optional[jax.Array] = None,  # [s] or [b, s]
+    window: Optional[int] = None,
+    causal: bool = True,
+    return_kv: bool = False,
+):
+    """Self-attention over a full sequence (train / prefill)."""
+    b, s, _ = x.shape
+    nkv = cfg.num_kv_heads
+    if positions is None:
+        positions = jnp.arange(s)
+    q = jnp.einsum("bsd,dnh->bsnh", x, params["wq"])
+    k = jnp.einsum("bsd,dnh->bsnh", x, params["wk"])
+    v = jnp.einsum("bsd,dnh->bsnh", x, params["wv"])
+    if cfg.use_rope:
+        q = apply_rope(q, jnp.broadcast_to(positions, (b, s)), cfg.rope_theta)
+        k = apply_rope(k, jnp.broadcast_to(positions, (b, s)), cfg.rope_theta)
+    qg = _group_q(q, nkv)
+    if s > CHUNK_THRESHOLD and s % Q_CHUNK == 0:
+        out = _attend_qchunked(qg, k, v, causal, window, cfg.attn_logit_softcap)
+    else:
+        sq = jnp.arange(s)[:, None]
+        sk = jnp.arange(s)[None, :]
+        mask = jnp.ones((s, s), bool) if not causal else (sk <= sq)
+        if window is not None:
+            mask = mask & (sk > sq - window)
+        out = _attend(qg, k, v, mask[None, None, None], cfg.attn_logit_softcap)
+    y = jnp.einsum("bsnh,nhd->bsd", out, params["wo"])
+    if return_kv:
+        return y, (k, v)  # post-rope keys: cache-ready
+    return y
+
+
+def attention_cross(
+    params: Params,
+    x: jax.Array,  # [b, sq, d]
+    kv_src: jax.Array,  # [b, sk, d]
+    cfg,
+) -> jax.Array:
+    """Encoder-decoder cross attention (no positions on k/v, no mask)."""
+    nkv = cfg.num_kv_heads
+    q = jnp.einsum("bsd,dnh->bsnh", x, params["wq"])
+    k = jnp.einsum("btd,dnh->btnh", kv_src, params["wk"])
+    v = jnp.einsum("btd,dnh->btnh", kv_src, params["wv"])
+    qg = _group_q(q, nkv)
+    mask = jnp.ones((1, 1, 1, x.shape[1], kv_src.shape[1]), bool)
+    out = _attend(qg, k, v, mask, cfg.attn_logit_softcap)
+    return jnp.einsum("bsnh,nhd->bsd", out, params["wo"])
+
+
+def quantize_kv(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """int8 absmax quantisation over head_dim: [..., hd] → (int8, scale[...])."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.round(x.astype(jnp.float32) / scale[..., None]).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array, dt) -> jax.Array:
+    return (q.astype(jnp.float32) * scale[..., None].astype(jnp.float32)).astype(dt)
+
+
+def attention_decode(
+    params: Params,
+    x: jax.Array,  # [b, 1, d]
+    cache_k: jax.Array,  # [b, S, nkv, hd]  (bf16, or int8 when cfg.kv_quant)
+    cache_v: jax.Array,
+    cache_index: jax.Array,  # scalar int32 — number of tokens already cached
+    cfg,
+    window: Optional[int] = None,
+    k_scale: Optional[jax.Array] = None,  # [b, S, nkv] (int8 caches only)
+    v_scale: Optional[jax.Array] = None,
+):
+    """One-token decode against a (possibly rolling) KV cache.
+
+    ``cache_index`` may be a scalar (whole-batch position) or a [b] vector
+    (per-request positions, continuous batching).  Keys are stored
+    *post-rope* at absolute positions, so a rolling buffer needs no
+    re-rotation.  Returns (out [b,1,d], new_cache_k, new_cache_v).
+    """
+    b = x.shape[0]
+    S = cache_k.shape[1]
+    nkv = cfg.num_kv_heads
+    per_req = jnp.ndim(cache_index) == 1
+    pos = (
+        cache_index[:, None] if per_req else jnp.broadcast_to(cache_index, (b, 1))
+    )  # [b, 1]
+    q = jnp.einsum("bsd,dnh->bsnh", x, params["wq"])
+    k = jnp.einsum("bsd,dnh->bsnh", x, params["wk"])
+    v = jnp.einsum("bsd,dnh->bsnh", x, params["wv"])
+    if cfg.use_rope:
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    quant = cache_k.dtype == jnp.int8
+    if quant:
+        k_w, ks_w = quantize_kv(k)
+        v_w, vs_w = quantize_kv(v)
+    else:
+        k_w, v_w = k, v
+    slot = pos % S if window is not None else pos  # [b, 1]
+    if per_req:
+        bidx = jnp.arange(b)
+        cache_k = cache_k.at[bidx, slot[:, 0]].set(k_w[:, 0].astype(cache_k.dtype))
+        cache_v = cache_v.at[bidx, slot[:, 0]].set(v_w[:, 0].astype(cache_v.dtype))
+        if quant:
+            k_scale = k_scale.at[bidx, slot[:, 0]].set(ks_w[:, 0])
+            v_scale = v_scale.at[bidx, slot[:, 0]].set(vs_w[:, 0])
+    else:
+        s0 = slot[0, 0]
+        cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k_w.astype(cache_k.dtype), s0, axis=1)
+        cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v_w.astype(cache_v.dtype), s0, axis=1)
+        if quant:
+            k_scale = jax.lax.dynamic_update_slice_in_dim(k_scale, ks_w, s0, axis=1)
+            v_scale = jax.lax.dynamic_update_slice_in_dim(v_scale, vs_w, s0, axis=1)
+    idx = jnp.arange(S)
+    mask = idx[None, :] <= pos  # [b, S] (rolling buffers are full once wrapped)
+    qg = _group_q(q, nkv)
+    if quant:
+        k_r = dequantize_kv(cache_k, k_scale, x.dtype)
+        v_r = dequantize_kv(cache_v, v_scale, x.dtype)
+    else:
+        k_r, v_r = cache_k, cache_v
+    out = _attend(qg, k_r, v_r, mask[:, None, None, None, :], cfg.attn_logit_softcap)
+    y = jnp.einsum("bsnh,nhd->bsd", out, params["wo"])
+    if quant:
+        return y, cache_k, cache_v, k_scale, v_scale
+    return y, cache_k, cache_v

@@ -1,0 +1,124 @@
+"""Shared model components: norms, rotary/sinusoidal positions, init helpers.
+
+Everything is purely functional: parameters are nested dict pytrees and every
+op is jit/shard-friendly (einsum-first, no data-dependent shapes).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def param_dtype(cfg) -> jnp.dtype:
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Normalisation
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(d: int, dtype=jnp.bfloat16) -> Params:
+    return {"scale": jnp.zeros((d,), dtype=jnp.float32)}
+
+
+def rmsnorm(params: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    normed = xf * jax.lax.rsqrt(var + eps)
+    # (1 + scale) parameterisation (gemma-style); scale init 0 == identity
+    return (normed * (1.0 + params["scale"])).astype(dt)
+
+
+def init_layernorm(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(params: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps) * params["scale"] + params["bias"]
+    return y.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Positional encodings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies, shape [head_dim // 2] (float32)."""
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta**exponent)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding.
+
+    x: [..., seq, heads, head_dim]; positions: broadcastable to [..., seq].
+    """
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)  # [hd/2]
+    ang = positions[..., None].astype(jnp.float32) * inv  # [..., seq, hd/2]
+    sin = jnp.sin(ang)[..., None, :]  # [..., seq, 1, hd/2]
+    cos = jnp.cos(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(num_pos: int, d_model: int, offset: int = 0) -> jax.Array:
+    """Classic transformer sinusoidal table, [num_pos, d_model] (float32)."""
+    pos = jnp.arange(offset, offset + num_pos, dtype=jnp.float32)[:, None]
+    div = jnp.exp(
+        jnp.arange(0, d_model, 2, dtype=jnp.float32) * (-math.log(10000.0) / d_model)
+    )
+    tbl = jnp.zeros((num_pos, d_model), jnp.float32)
+    tbl = tbl.at[:, 0::2].set(jnp.sin(pos * div))
+    tbl = tbl.at[:, 1::2].set(jnp.cos(pos * div))
+    return tbl
+
+
+def sinusoidal_at(positions: jax.Array, d_model: int) -> jax.Array:
+    """Sinusoidal encoding for arbitrary integer positions, [..., d_model]."""
+    pos = positions.astype(jnp.float32)[..., None]
+    div = jnp.exp(
+        jnp.arange(0, d_model, 2, dtype=jnp.float32) * (-math.log(10000.0) / d_model)
+    )
+    sin = jnp.sin(pos * div)
+    cos = jnp.cos(pos * div)
+    return jnp.stack([sin, cos], axis=-1).reshape(*positions.shape, d_model)
+
+
+# ---------------------------------------------------------------------------
+# Misc
+# ---------------------------------------------------------------------------
+
+
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+def dense_init(key, shape, fan_in: Optional[int] = None, dtype=jnp.bfloat16) -> jax.Array:
+    fan = fan_in if fan_in is not None else shape[0]
+    std = 1.0 / math.sqrt(max(1, fan))
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.bfloat16) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+def split_keys(key, n: int):
+    return list(jax.random.split(key, n))

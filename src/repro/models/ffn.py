@@ -1,0 +1,32 @@
+"""Dense feed-forward blocks (SwiGLU / GeGLU / plain GELU)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Params, dense_init, split_keys
+
+
+def init_ffn(d_model: int, d_ff: int, activation: str, key, dtype=jnp.bfloat16) -> Params:
+    k1, k2, k3 = split_keys(key, 3)
+    params = {
+        "w_up": dense_init(k1, (d_model, d_ff), dtype=dtype),
+        "w_down": dense_init(k2, (d_ff, d_model), fan_in=d_ff, dtype=dtype),
+    }
+    if activation in ("swiglu", "geglu"):
+        params["w_gate"] = dense_init(k3, (d_model, d_ff), dtype=dtype)
+    return params
+
+
+def ffn(params: Params, x: jax.Array, activation: str) -> jax.Array:
+    up = jnp.einsum("...d,df->...f", x, params["w_up"])
+    if activation == "swiglu":
+        gate = jnp.einsum("...d,df->...f", x, params["w_gate"])
+        h = jax.nn.silu(gate) * up
+    elif activation == "geglu":
+        gate = jnp.einsum("...d,df->...f", x, params["w_gate"])
+        h = jax.nn.gelu(gate, approximate=True) * up
+    else:  # gelu
+        h = jax.nn.gelu(up, approximate=True)
+    return jnp.einsum("...f,fd->...d", h, params["w_down"])

@@ -1,0 +1,104 @@
+"""Model facade: init / loss / step functions consumed by training, serving,
+launch and the smoke tests."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.models.common import Params
+
+
+def init_params(cfg, seed: int = 0) -> Params:
+    return transformer.init_params(cfg, jax.random.PRNGKey(seed))
+
+
+def logits_fn(params, tokens, cfg, extra=None, remat: bool = False) -> Tuple[jax.Array, Dict]:
+    x, _, aux = transformer.forward(params, tokens, cfg, extra=extra, remat=remat)
+    return transformer.lm_head(params, x, cfg), aux
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean next-token xent. logits [b, s, v] f32, labels [b, s]."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def chunked_xent(params, x, labels, cfg, chunk: int = 512) -> jax.Array:
+    """Next-token xent without materialising the full [B,S,V] logits: the
+    sequence is processed in chunks (essential for 200k+ vocabularies at
+    megatoken batch sizes — see EXPERIMENTS.md §Perf)."""
+    B, S, d = x.shape
+    chunk = min(chunk, S)
+    if S % chunk:
+        chunk = S  # fall back (smoke-test sizes)
+    n = S // chunk
+    xc = x.reshape(B, n, chunk, d).swapaxes(0, 1)  # [n, B, chunk, d]
+    lc = labels.reshape(B, n, chunk).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def per_chunk(args):
+        xi, li = args
+        logits = transformer.lm_head(params, xi, cfg)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, li[..., None], axis=-1)[..., 0]
+        return jnp.sum(logz - gold)
+
+    totals = jax.lax.map(per_chunk, (xc, lc))
+    return jnp.sum(totals) / (B * S)
+
+
+def loss_fn(
+    params,
+    tokens,
+    labels,
+    cfg,
+    extra=None,
+    remat: bool = False,
+    lb_coef: float = 0.01,
+    xent_chunk: int = 0,
+):
+    if xent_chunk:
+        x, _, aux = transformer.forward(params, tokens, cfg, extra=extra, remat=remat)
+        loss = chunked_xent(params, x, labels, cfg, xent_chunk)
+    else:
+        logits, aux = logits_fn(params, tokens, cfg, extra=extra, remat=remat)
+        loss = cross_entropy(logits, labels)
+    if cfg.has_moe:
+        loss = loss + lb_coef * aux["lb_loss"]
+    return loss, aux
+
+
+def prefill(params, tokens, cfg, cache_len: int, extra=None):
+    return transformer.prefill(params, tokens, cfg, cache_len, extra=extra)
+
+
+def decode_step(params, tokens, caches, cache_index, cfg, extra=None, unroll=False):
+    return transformer.decode_step(
+        params, tokens, caches, cache_index, cfg, extra=extra, unroll=unroll
+    )
+
+
+def greedy_token(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def init_decode_caches(cfg, batch: int, cache_len: int) -> Dict[str, jax.Array]:
+    """Zero caches matching ``configs.base._cache_specs`` (for decode-only runs).
+
+    For encoder-decoder configs the caller must run ``transformer.run_encoder``
+    and overwrite ``caches["enc_out"]``.
+    """
+    from repro.configs.base import InputShape, input_specs
+
+    shape = InputShape("adhoc", cache_len, batch, "decode")
+    specs = input_specs(cfg, shape)
+    return {
+        k: jnp.zeros(v.shape, v.dtype)
+        for k, v in specs.items()
+        if k not in ("tokens", "cache_index")
+    }

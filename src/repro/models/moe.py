@@ -1,0 +1,243 @@
+"""Mixture-of-Experts layer: routing, dispatch, shared experts, AEBS hook.
+
+Two dispatch implementations with identical semantics (tested for
+equivalence):
+
+* :func:`capacity_dispatch_ffn` — einsum/one-hot based.  O(T·S·cap) mask
+  memory; the readable oracle, used at small scale and as the kernels' ref.
+* :func:`scatter_dispatch_ffn` — scatter/gather based.  O(S·cap·d) buffer
+  memory; the production path, also the per-shard body of the
+  expert-parallel (shard_map) MoE in ``repro.launch.steps``.
+
+Scheduling hook: when a :class:`repro.core.aebs.ReplicaLayout` is provided,
+token routing is rewritten from logical expert ids to *physical replica
+slots* by a pluggable scheduler (AEBS / random / token-hash — Janus vs the
+paper's baselines) before dispatch.  This is the paper's §3.4 workflow:
+route → collect activated → select replicas → rewrite → dispatch.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Params, dense_init, split_keys
+from repro.models.ffn import ffn, init_ffn
+
+SchedulerFn = Callable[..., Tuple[jax.Array, jax.Array, jax.Array]]
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def init_moe(cfg, key, dtype=jnp.bfloat16) -> Params:
+    E, d, f = cfg.num_experts, cfg.d_model, cfg.d_ff_expert
+    k1, k2, k3, k4, k5 = split_keys(key, 5)
+    params: Params = {
+        "router": dense_init(k1, (d, E), fan_in=d, dtype=jnp.float32),
+        "w_gate": dense_init(k2, (E, d, f), fan_in=d, dtype=dtype),
+        "w_up": dense_init(k3, (E, d, f), fan_in=d, dtype=dtype),
+        "w_down": dense_init(k4, (E, f, d), fan_in=f, dtype=dtype),
+    }
+    if cfg.num_shared_experts:
+        params["shared"] = init_ffn(d, cfg.num_shared_experts * f, "swiglu", k5, dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Routing (gating) — softmax then top-k, renormalised (Qwen/DeepSeek style)
+# ---------------------------------------------------------------------------
+
+
+def route(router_w: jax.Array, x2d: jax.Array, top_k: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (gates [T,k] f32, eids [T,k] i32, probs [T,E] f32)."""
+    logits = jnp.einsum("td,de->te", x2d.astype(jnp.float32), router_w)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eids = jax.lax.top_k(probs, top_k)
+    gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
+    return gates, eids.astype(jnp.int32), probs
+
+
+def load_balance_loss(probs: jax.Array, eids: jax.Array, num_experts: int) -> jax.Array:
+    """Switch-transformer auxiliary loss: E * Σ_e f_e · P_e."""
+    onehot = jax.nn.one_hot(eids, num_experts)  # [T, k, E]
+    frac_tokens = jnp.mean(jnp.sum(onehot, axis=1), axis=0)  # [E]
+    mean_probs = jnp.mean(probs, axis=0)  # [E]
+    return num_experts * jnp.sum(frac_tokens * mean_probs)
+
+
+# ---------------------------------------------------------------------------
+# Expert FFN over stacked bucket weights
+# ---------------------------------------------------------------------------
+
+
+def expert_ffn(w: Params, xe: jax.Array) -> jax.Array:
+    """xe [S, C, d] with stacked weights [S, d, f] → [S, C, d] (SwiGLU)."""
+    g = jnp.einsum("scd,sdf->scf", xe, w["w_gate"])
+    u = jnp.einsum("scd,sdf->scf", xe, w["w_up"])
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("scf,sfd->scd", h, w["w_down"])
+
+
+def gather_slot_weights(params: Params, slot_to_expert: jax.Array) -> Params:
+    """Materialise per-slot expert weights (replication) from logical weights.
+
+    slot_to_expert: flat [S_total] int32 (-1 → expert 0; such slots receive no
+    tokens by construction)."""
+    idx = jnp.maximum(slot_to_expert, 0)
+    return {k: params[k][idx] for k in ("w_gate", "w_up", "w_down")}
+
+
+# ---------------------------------------------------------------------------
+# Dispatch paths
+# ---------------------------------------------------------------------------
+
+
+def _positions_in_bucket(flat_ids: jax.Array, num_buckets: int, item_mask: Optional[jax.Array]) -> jax.Array:
+    """Arrival order of each item within its bucket. flat_ids [I] → pos [I]."""
+    oh = jax.nn.one_hot(flat_ids, num_buckets, dtype=jnp.int32)
+    if item_mask is not None:
+        oh = oh * item_mask[:, None].astype(jnp.int32)
+    pos = jnp.sum(jnp.cumsum(oh, axis=0) * oh, axis=-1) - 1
+    return pos
+
+
+def capacity_dispatch_ffn(
+    x2d: jax.Array,  # [T, d]
+    bucket_ids: jax.Array,  # [T, k]
+    gates: jax.Array,  # [T, k]
+    num_buckets: int,
+    capacity: int,
+    weights: Params,  # stacked [num_buckets, ...]
+    item_mask: Optional[jax.Array] = None,  # [T*k] bool
+) -> jax.Array:
+    """Einsum/one-hot dispatch (oracle path)."""
+    T, k = bucket_ids.shape
+    dt = x2d.dtype
+    flat = bucket_ids.reshape(-1)
+    x_rep = jnp.repeat(x2d, k, axis=0)  # [I, d], item i = (t, j) with i = t*k+j
+    pos = _positions_in_bucket(flat, num_buckets, item_mask)
+    keep = (pos >= 0) & (pos < capacity)
+    if item_mask is not None:
+        keep = keep & item_mask
+    pos_c = jnp.where(keep, pos, capacity)  # one_hot(capacity, capacity) == 0 → dropped
+    disp = jnp.einsum(
+        "ie,ic->iec",
+        jax.nn.one_hot(flat, num_buckets, dtype=dt),
+        jax.nn.one_hot(pos_c, capacity, dtype=dt),
+    )
+    xin = jnp.einsum("iec,id->ecd", disp, x_rep)
+    out = expert_ffn(weights, xin)
+    y_items = jnp.einsum("iec,ecd->id", disp, out)
+    gflat = (gates.reshape(-1) * keep).astype(dt)
+    return (y_items * gflat[:, None]).reshape(T, k, -1).sum(axis=1)
+
+
+def scatter_dispatch_ffn(
+    x2d: jax.Array,
+    bucket_ids: jax.Array,
+    gates: jax.Array,
+    num_buckets: int,
+    capacity: int,
+    weights: Params,
+    item_mask: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Scatter/gather dispatch (production path, same semantics)."""
+    T, k = bucket_ids.shape
+    d = x2d.shape[-1]
+    dt = x2d.dtype
+    flat = bucket_ids.reshape(-1)
+    x_rep = jnp.repeat(x2d, k, axis=0)
+    pos = _positions_in_bucket(flat, num_buckets, item_mask)
+    keep = (pos >= 0) & (pos < capacity)
+    if item_mask is not None:
+        keep = keep & item_mask
+    pos_c = jnp.where(keep, pos, capacity)  # row `capacity` = dump row
+    bkt_c = jnp.where(keep, flat, 0)
+    buf = jnp.zeros((num_buckets, capacity + 1, d), dt)
+    buf = buf.at[bkt_c, pos_c].add(jnp.where(keep[:, None], x_rep, 0))
+    out = expert_ffn(weights, buf[:, :capacity])
+    y_items = out[bkt_c, jnp.minimum(pos_c, capacity - 1)]
+    gflat = (gates.reshape(-1) * keep).astype(dt)
+    return (y_items * gflat[:, None]).reshape(T, k, -1).sum(axis=1)
+
+
+def default_capacity(num_tokens: int, top_k: int, num_buckets: int, factor: float) -> int:
+    cap = math.ceil(num_tokens * top_k * factor / max(1, num_buckets))
+    return max(4, int(cap))
+
+
+# ---------------------------------------------------------------------------
+# Full MoE layer
+# ---------------------------------------------------------------------------
+
+
+def moe_layer(
+    params: Params,
+    x: jax.Array,  # [b, s, d]
+    cfg,
+    *,
+    dispatch: str = "einsum",  # einsum | scatter
+    layout_tables: Optional[Dict[str, jax.Array]] = None,
+    slot_to_expert: Optional[jax.Array] = None,  # flat [S_total]
+    num_instances: int = 0,
+    scheduler: Optional[SchedulerFn] = None,
+    capacity: Optional[int] = None,
+    with_aux: bool = False,
+    ep_ctx: Optional[Dict] = None,  # mesh/dp_axes/model_axis/mode for dispatch="ep"
+):
+    """Route + (optional scheduling) + dispatch + shared experts.
+
+    Without a layout: buckets are the logical experts (training / monolithic
+    baseline).  With layout + scheduler: buckets are physical replica slots
+    chosen by the scheduler (Janus serving path).
+    """
+    if dispatch == "ep":
+        from repro.models import moe_ep
+
+        return moe_ep.moe_layer_ep(
+            params,
+            x,
+            cfg,
+            scheduler=scheduler,
+            layout_tables=layout_tables,
+            slot_to_expert=slot_to_expert,
+            num_instances=num_instances,
+            with_aux=with_aux,
+            **(ep_ctx or {}),
+        )
+
+    b, s, d = x.shape
+    x2d = x.reshape(b * s, d)
+    gates, eids, probs = route(params["router"], x2d, cfg.top_k)
+
+    aux: Dict[str, jax.Array] = {}
+    if layout_tables is not None and scheduler is not None:
+        slot_ids, load, _ = scheduler(eids, layout_tables, num_instances)
+        bucket_ids = slot_ids
+        num_buckets = int(slot_to_expert.shape[0])
+        weights = gather_slot_weights(params, slot_to_expert)
+        aux["load"] = load
+        aux["a_max"] = jnp.max(load)
+    else:
+        bucket_ids = eids
+        num_buckets = cfg.num_experts
+        weights = {k: params[k] for k in ("w_gate", "w_up", "w_down")}
+
+    cap = capacity or default_capacity(b * s, cfg.top_k, num_buckets, cfg.capacity_factor)
+    dispatch_fn = capacity_dispatch_ffn if dispatch == "einsum" else scatter_dispatch_ffn
+    y2d = dispatch_fn(x2d, bucket_ids, gates.astype(x.dtype), num_buckets, cap, weights)
+
+    if "shared" in params:
+        y2d = y2d + ffn(params["shared"], x2d, "swiglu")
+
+    y = y2d.reshape(b, s, d)
+    if with_aux:
+        aux["lb_loss"] = load_balance_loss(probs, eids, cfg.num_experts)
+        return y, aux
+    return y

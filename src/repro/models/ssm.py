@@ -1,0 +1,271 @@
+"""Mamba-1 (falcon-mamba) and Mamba-2 (zamba2) state-space blocks.
+
+Sequence mode (train / prefill) uses ``jax.lax.scan`` over time; decode mode
+is a single recurrence step against carried (conv_state, ssm_state).  States
+are float32 for numerical stability; activations follow the model dtype.
+
+Layout notes (TPU-friendly):
+  Mamba-1 state:  [batch, d_inner, state]
+  Mamba-2 state:  [batch, heads, head_dim, state]
+  conv state:     [batch, conv_k - 1, conv_dim]  (rolling window of inputs)
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Params, dense_init, split_keys
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def init_mamba(cfg, key, dtype=jnp.bfloat16) -> Params:
+    d, di, N = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    K = cfg.ssm_conv
+    if cfg.ssm_version == 1:
+        dt_rank = max(1, math.ceil(d / 16))
+        k1, k2, k3, k4, k5 = split_keys(key, 5)
+        return {
+            "in_proj": dense_init(k1, (d, 2 * di), dtype=dtype),
+            "conv_w": dense_init(k2, (K, di), fan_in=K, dtype=dtype),
+            "conv_b": jnp.zeros((di,), dtype),
+            "x_proj": dense_init(k3, (di, dt_rank + 2 * N), fan_in=di, dtype=dtype),
+            "dt_proj": dense_init(k4, (dt_rank, di), fan_in=dt_rank, dtype=jnp.float32),
+            "dt_bias": jnp.zeros((di,), jnp.float32),
+            "A_log": jnp.log(
+                jnp.broadcast_to(jnp.arange(1, N + 1, dtype=jnp.float32), (di, N))
+            ),
+            "D": jnp.ones((di,), jnp.float32),
+            "out_proj": dense_init(k5, (di, d), fan_in=di, dtype=dtype),
+        }
+    # Mamba-2 (n_groups = 1)
+    nh = cfg.ssm_num_heads
+    cd = cfg.conv_dim
+    k1, k2, k3 = split_keys(key, 3)
+    return {
+        "in_proj": dense_init(k1, (d, 2 * di + 2 * N + nh), dtype=dtype),
+        "conv_w": dense_init(k2, (K, cd), fan_in=K, dtype=dtype),
+        "conv_b": jnp.zeros((cd,), dtype),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "norm_scale": jnp.zeros((di,), jnp.float32),
+        "out_proj": dense_init(k3, (di, d), fan_in=di, dtype=dtype),
+    }
+
+
+def init_ssm_state(cfg, batch: int) -> Tuple[jax.Array, jax.Array]:
+    """(ssm_state f32, conv_state model-dtype) zeros for decode."""
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    conv = jnp.zeros((batch, cfg.ssm_conv - 1, cfg.conv_dim), dt)
+    if cfg.ssm_version == 1:
+        ssm = jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32)
+    else:
+        ssm = jnp.zeros(
+            (batch, cfg.ssm_num_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32
+        )
+    return ssm, conv
+
+
+# ---------------------------------------------------------------------------
+# Depthwise causal conv
+# ---------------------------------------------------------------------------
+
+
+def _causal_conv_seq(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """x [b, s, c], w [K, c] depthwise causal conv."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    # sum of shifted slices — K is tiny (4), unrolled adds beat conv lowering
+    s = x.shape[1]
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(K):
+        out = out + pad[:, i : i + s, :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _causal_conv_step(
+    x_new: jax.Array, conv_state: jax.Array, w: jax.Array, b: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """x_new [b, c]; conv_state [b, K-1, c] (oldest first) → (y [b, c], new_state)."""
+    window = jnp.concatenate([conv_state, x_new[:, None, :]], axis=1)  # [b, K, c]
+    y = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32), w.astype(jnp.float32))
+    y = (y + b.astype(jnp.float32)).astype(x_new.dtype)
+    return y, window[:, 1:, :]
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1
+# ---------------------------------------------------------------------------
+
+
+def _m1_core_step(p, x_t, h, N, dt_rank):
+    """x_t [b, di] post-conv, h [b, di, N] → (y [b, di], h')."""
+    dbc = jnp.einsum("bd,dr->br", x_t.astype(jnp.float32), p["x_proj"].astype(jnp.float32))
+    dt_in, B, C = jnp.split(dbc, [dt_rank, dt_rank + N], axis=-1)
+    dt = jax.nn.softplus(dt_in @ p["dt_proj"] + p["dt_bias"])  # [b, di]
+    A = -jnp.exp(p["A_log"])  # [di, N]
+    dA = jnp.exp(dt[:, :, None] * A[None])  # [b, di, N]
+    dBx = (dt * x_t.astype(jnp.float32))[:, :, None] * B[:, None, :]
+    h = dA * h + dBx
+    y = jnp.einsum("bdn,bn->bd", h, C) + p["D"] * x_t.astype(jnp.float32)
+    return y, h
+
+
+def _conv_tail(x_pre: jax.Array, K: int) -> jax.Array:
+    """Last K-1 pre-conv inputs, zero-padded at the front: [b, K-1, c]."""
+    b, s, c = x_pre.shape
+    pad = jnp.pad(x_pre, ((0, 0), (max(0, K - 1 - s), 0), (0, 0)))
+    return pad[:, -(K - 1):, :]
+
+
+SSM_CHUNK = 128  # time-chunk for the recurrent scan (memory/backward trade)
+
+
+def _chunked_scan(step, h0, xs_t, seq_len: int):
+    """scan(step) over time with per-chunk gradient checkpointing.
+
+    A flat scan stores its f32 carry at EVERY timestep for the backward pass
+    — for zamba2 train_4k that is 4096 × ~21 MB ≈ 85 GB per device (§Perf
+    iteration Z1).  Chunking stores one carry per chunk and recomputes inside,
+    bounding residuals to seq_len/SSM_CHUNK carries + one chunk's steps.
+    """
+    chunk = SSM_CHUNK
+    if seq_len <= chunk or seq_len % chunk:
+        return jax.lax.scan(step, h0, xs_t)
+
+    @jax.checkpoint
+    def chunk_body(h, xs_chunk):
+        return jax.lax.scan(step, h, xs_chunk)
+
+    n = seq_len // chunk
+    xs_c = jax.tree.map(lambda a: a.reshape(n, chunk, *a.shape[1:]), xs_t)
+    h_final, ys = jax.lax.scan(chunk_body, h0, xs_c)
+    ys = jax.tree.map(lambda a: a.reshape(n * chunk, *a.shape[2:]), ys)
+    return h_final, ys
+
+
+def mamba1_seq(p: Params, u: jax.Array, cfg) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """u [b, s, d] → (y [b, s, d], final ssm state, conv tail)."""
+    d = cfg.d_model
+    di, N = cfg.d_inner, cfg.ssm_state
+    dt_rank = max(1, math.ceil(d / 16))
+    xz = jnp.einsum("bsd,de->bse", u, p["in_proj"])
+    x, z = jnp.split(xz, 2, axis=-1)
+    tail = _conv_tail(x, cfg.ssm_conv)
+    x = jax.nn.silu(_causal_conv_seq(x, p["conv_w"], p["conv_b"]))
+
+    def step(h, x_t):
+        y, h = _m1_core_step(p, x_t, h, N, dt_rank)
+        return h, y
+
+    h0 = jnp.zeros((u.shape[0], di, N), jnp.float32)
+    h_final, ys = _chunked_scan(step, h0, jnp.swapaxes(x, 0, 1), x.shape[1])
+    y = jnp.swapaxes(ys, 0, 1).astype(u.dtype)
+    y = y * jax.nn.silu(z)
+    return jnp.einsum("bse,ed->bsd", y, p["out_proj"]), h_final, tail
+
+
+def mamba1_step(
+    p: Params, u: jax.Array, conv_state: jax.Array, ssm_state: jax.Array, cfg
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """u [b, 1, d] decode step → (y [b, 1, d], conv_state', ssm_state')."""
+    d, N = cfg.d_model, cfg.ssm_state
+    dt_rank = max(1, math.ceil(d / 16))
+    xz = jnp.einsum("bsd,de->bse", u, p["in_proj"])[:, 0]
+    x, z = jnp.split(xz, 2, axis=-1)
+    x_c, conv_state = _causal_conv_step(x, conv_state, p["conv_w"], p["conv_b"])
+    x_c = jax.nn.silu(x_c)
+    y, ssm_state = _m1_core_step(p, x_c, ssm_state, N, dt_rank)
+    y = y.astype(u.dtype) * jax.nn.silu(z)
+    return jnp.einsum("be,ed->bd", y, p["out_proj"])[:, None], conv_state, ssm_state
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD, n_groups = 1, scalar A per head)
+# ---------------------------------------------------------------------------
+
+
+def _m2_split(cfg, proj):
+    di, N, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_num_heads
+    z = proj[..., :di]
+    xBC = proj[..., di : di + di + 2 * N]
+    dt = proj[..., di + di + 2 * N :]
+    assert dt.shape[-1] == nh
+    return z, xBC, dt
+
+
+def _m2_core_step(p, xBC_t, dt_t, h, cfg):
+    """xBC_t [b, conv_dim] post-conv, dt_t [b, nh], h [b, nh, hd, N]."""
+    di, N, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_num_heads, cfg.ssm_head_dim
+    x = xBC_t[..., :di].astype(jnp.float32)
+    B = xBC_t[..., di : di + N].astype(jnp.float32)
+    C = xBC_t[..., di + N :].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_t.astype(jnp.float32) + p["dt_bias"])  # [b, nh]
+    A = -jnp.exp(p["A_log"])  # [nh]
+    dA = jnp.exp(dt * A)  # [b, nh]
+    xh = x.reshape(*x.shape[:-1], nh, hd)
+    h = dA[..., None, None] * h + (dt[..., None] * xh)[..., None] * B[:, None, None, :]
+    y = jnp.einsum("bhdn,bn->bhd", h, C) + p["D"][:, None] * xh
+    return y.reshape(*y.shape[:-2], di), h
+
+
+def mamba2_seq(p: Params, u: jax.Array, cfg) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    di = cfg.d_inner
+    proj = jnp.einsum("bsd,de->bse", u, p["in_proj"])
+    z, xBC, dt = _m2_split(cfg, proj)
+    tail = _conv_tail(xBC, cfg.ssm_conv)
+    xBC = jax.nn.silu(_causal_conv_seq(xBC, p["conv_w"], p["conv_b"]))
+
+    def step(h, inp):
+        xBC_t, dt_t = inp
+        y, h = _m2_core_step(p, xBC_t, dt_t, h, cfg)
+        return h, y
+
+    b = u.shape[0]
+    h0 = jnp.zeros((b, cfg.ssm_num_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32)
+    h_final, ys = _chunked_scan(
+        step, h0, (jnp.swapaxes(xBC, 0, 1), jnp.swapaxes(dt, 0, 1)), xBC.shape[1]
+    )
+    y = jnp.swapaxes(ys, 0, 1)
+    y = _gated_rmsnorm(y, z.astype(jnp.float32), p["norm_scale"], cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", y.astype(u.dtype), p["out_proj"]), h_final, tail
+
+
+def mamba2_step(
+    p: Params, u: jax.Array, conv_state: jax.Array, ssm_state: jax.Array, cfg
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    proj = jnp.einsum("bsd,de->bse", u, p["in_proj"])[:, 0]
+    z, xBC, dt = _m2_split(cfg, proj)
+    xBC_c, conv_state = _causal_conv_step(xBC, conv_state, p["conv_w"], p["conv_b"])
+    xBC_c = jax.nn.silu(xBC_c)
+    y, ssm_state = _m2_core_step(p, xBC_c, dt, ssm_state, cfg)
+    y = _gated_rmsnorm(y[:, None], z[:, None].astype(jnp.float32), p["norm_scale"], cfg.norm_eps)[:, 0]
+    return jnp.einsum("be,ed->bd", y.astype(u.dtype), p["out_proj"])[:, None], conv_state, ssm_state
+
+
+def _gated_rmsnorm(y: jax.Array, z: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    """Mamba-2 gated RMSNorm: norm(y * silu(z)) * (1 + scale)."""
+    g = y.astype(jnp.float32) * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(g), axis=-1, keepdims=True)
+    return g * jax.lax.rsqrt(var + eps) * (1.0 + scale)
+
+
+# ---------------------------------------------------------------------------
+# Family dispatch
+# ---------------------------------------------------------------------------
+
+
+def mamba_seq(p, u, cfg):
+    return (mamba1_seq if cfg.ssm_version == 1 else mamba2_seq)(p, u, cfg)
+
+
+def mamba_step(p, u, conv_state, ssm_state, cfg):
+    return (mamba1_step if cfg.ssm_version == 1 else mamba2_step)(p, u, conv_state, ssm_state, cfg)

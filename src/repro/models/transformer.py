@@ -1,0 +1,484 @@
+"""Decoder-stack assembly for every architecture family.
+
+The layer pattern of each config is *periodic* (see ``ModelConfig.layer_kinds``):
+e.g. gemma2 alternates (local, global); zamba2 repeats (shared-attn+mamba,
+mamba×5); most models have period 1.  We stack the parameters of each position
+in the period along a leading ``n_periods`` axis and ``lax.scan`` over periods,
+which keeps the lowered HLO small even for 60-layer models.
+
+Entry points:
+  * :func:`init_params`
+  * :func:`forward`        — full-sequence logits (training)
+  * :func:`prefill`        — full sequence → (last-token logits, decode caches)
+  * :func:`decode_step`    — one token against the caches
+
+Caches follow ``repro.configs.base._cache_specs`` layouts exactly, so
+``input_specs`` stand-ins line up with the real pytrees.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import ffn as ffn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import (
+    Params,
+    embed_init,
+    init_rmsnorm,
+    rmsnorm,
+    sinusoidal_at,
+    softcap,
+    split_keys,
+)
+
+# ---------------------------------------------------------------------------
+# Period structure
+# ---------------------------------------------------------------------------
+
+
+def period_pattern(cfg) -> Tuple[Tuple[str, ...], int]:
+    """(kinds within one period, number of periods)."""
+    kinds = cfg.layer_kinds()
+    if cfg.family == "hybrid" and cfg.hybrid_attn_every:
+        p = cfg.hybrid_attn_every
+    elif cfg.attn_pattern == "local_global":
+        p = 2
+    else:
+        p = 1
+    assert cfg.num_layers % p == 0, (cfg.name, cfg.num_layers, p)
+    period = kinds[:p]
+    assert kinds == period * (cfg.num_layers // p)
+    return period, cfg.num_layers // p
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(kind: str, cfg, key, dtype) -> Params:
+    d = cfg.d_model
+    ks = split_keys(key, 4)
+    if kind in ("dense", "dense_local"):
+        return {
+            "ln1": init_rmsnorm(d),
+            "attn": attn_mod.init_attention(cfg, ks[0], dtype),
+            "ln2": init_rmsnorm(d),
+            "ffn": ffn_mod.init_ffn(d, cfg.d_ff, cfg.ffn_activation, ks[1], dtype),
+        }
+    if kind == "moe":
+        return {
+            "ln1": init_rmsnorm(d),
+            "attn": attn_mod.init_attention(cfg, ks[0], dtype),
+            "ln2": init_rmsnorm(d),
+            "moe": moe_mod.init_moe(cfg, ks[1], dtype),
+        }
+    if kind in ("ssm", "ssm_hybrid"):
+        return {"ln1": init_rmsnorm(d), "mamba": ssm_mod.init_mamba(cfg, ks[0], dtype)}
+    if kind == "encdec":
+        return {
+            "ln1": init_rmsnorm(d),
+            "attn": attn_mod.init_attention(cfg, ks[0], dtype),
+            "ln_x": init_rmsnorm(d),
+            "xattn": attn_mod.init_attention(cfg, ks[1], dtype),
+            "ln2": init_rmsnorm(d),
+            "ffn": ffn_mod.init_ffn(d, cfg.d_ff, cfg.ffn_activation, ks[2], dtype),
+        }
+    raise ValueError(kind)
+
+
+def init_params(cfg, key) -> Params:
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    period, n_periods = period_pattern(cfg)
+    keys = split_keys(key, 8)
+    params: Params = {"embed": embed_init(keys[0], cfg.vocab_size, cfg.d_model, dtype)}
+
+    # decoder blocks: stacked over periods (vmap the per-layer init)
+    dec_kinds = tuple("encdec" if cfg.encoder_layers else k for k in period)
+    blocks = {}
+    for pos, kind in enumerate(dec_kinds):
+        pos_keys = jnp.stack(split_keys(jax.random.fold_in(keys[1], pos), n_periods))
+        blocks[f"pos{pos}"] = jax.vmap(lambda k: _init_layer(kind, cfg, k, dtype))(pos_keys)
+    params["blocks"] = blocks
+    params["final_norm"] = init_rmsnorm(cfg.d_model)
+
+    if cfg.family == "hybrid":
+        # zamba2 shared (weight-tied) attention block: attn + dense FFN
+        params["shared_attn"] = {
+            "ln1": init_rmsnorm(cfg.d_model),
+            "attn": attn_mod.init_attention(cfg, keys[2], dtype),
+            "ln2": init_rmsnorm(cfg.d_model),
+            "ffn": ffn_mod.init_ffn(cfg.d_model, cfg.d_ff, cfg.ffn_activation, keys[3], dtype),
+        }
+    if cfg.encoder_layers:
+        enc_keys = jnp.stack(split_keys(keys[4], cfg.encoder_layers))
+        params["encoder"] = jax.vmap(lambda k: _init_layer("dense", cfg, k, dtype))(enc_keys)
+        params["enc_norm"] = init_rmsnorm(cfg.d_model)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+
+def embed_tokens(params: Params, tokens: jax.Array, cfg, extra: Optional[Dict[str, Any]] = None) -> jax.Array:
+    x = params["embed"][tokens]
+    if cfg.family != "audio":
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+    if extra and cfg.frontend == "vision_patches" and "patch_embeds" in extra:
+        p = extra["patch_embeds"]
+        np_ = p.shape[1]
+        x = jnp.concatenate([p.astype(x.dtype), x[:, np_:, :]], axis=1)
+    return x
+
+
+def lm_head(params: Params, x: jax.Array, cfg) -> jax.Array:
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = jnp.einsum("...d,vd->...v", x, params["embed"]).astype(jnp.float32)
+    return softcap(logits, cfg.final_logit_softcap)
+
+
+# ---------------------------------------------------------------------------
+# Whisper encoder
+# ---------------------------------------------------------------------------
+
+
+def run_encoder(params: Params, frames: jax.Array, cfg) -> jax.Array:
+    """frames [b, enc_seq, d] (stubbed conv/mel output) → encoder states."""
+    x = frames + sinusoidal_at(jnp.arange(frames.shape[1]), cfg.d_model).astype(frames.dtype)
+
+    def body(x, lp):
+        h = attn_mod.attention_full(lp["attn"], rmsnorm(lp["ln1"], x, cfg.norm_eps), cfg, causal=False)
+        x = x + h
+        x = x + ffn_mod.ffn(lp["ffn"], rmsnorm(lp["ln2"], x, cfg.norm_eps), cfg.ffn_activation)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence decoder pass (training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _layer_full(kind, lp, x, cfg, positions, shared_attn, enc_out, moe_ctx, collect):
+    """One layer, full sequence.  Returns (x, cache_dict, aux).
+
+    cache_dict keys (present only when ``collect``): "kv" = (k, v) post-rope,
+    "ssm" = final recurrent state.  ssm_hybrid layers produce both.
+    """
+    aux = {}
+    cache = {}
+    if kind in ("dense", "dense_local", "moe", "encdec"):
+        window = cfg.sliding_window if kind == "dense_local" else None
+        h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        if collect:
+            h, kv = attn_mod.attention_full(
+                lp["attn"], h, cfg, positions=positions, window=window, return_kv=True
+            )
+            cache["kv"] = kv
+        else:
+            h = attn_mod.attention_full(lp["attn"], h, cfg, positions=positions, window=window)
+        x = x + h
+        if kind == "encdec":
+            hx = rmsnorm(lp["ln_x"], x, cfg.norm_eps)
+            x = x + attn_mod.attention_cross(lp["xattn"], hx, enc_out, cfg)
+        h2 = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        if kind == "moe":
+            y, moe_aux = moe_mod.moe_layer(lp["moe"], h2, cfg, with_aux=True, **(moe_ctx or {}))
+            aux.update({k: v for k, v in moe_aux.items() if k == "lb_loss"})
+            x = x + y
+        else:
+            x = x + ffn_mod.ffn(lp["ffn"], h2, cfg.ffn_activation)
+    elif kind in ("ssm", "ssm_hybrid"):
+        if kind == "ssm_hybrid":
+            h = rmsnorm(shared_attn["ln1"], x, cfg.norm_eps)
+            if collect:
+                h, kv = attn_mod.attention_full(
+                    shared_attn["attn"], h, cfg, positions=positions, return_kv=True
+                )
+                cache["kv"] = kv
+            else:
+                h = attn_mod.attention_full(shared_attn["attn"], h, cfg, positions=positions)
+            x = x + h
+            x = x + ffn_mod.ffn(shared_attn["ffn"], rmsnorm(shared_attn["ln2"], x, cfg.norm_eps), cfg.ffn_activation)
+        y, state, conv_tail = ssm_mod.mamba_seq(lp["mamba"], rmsnorm(lp["ln1"], x, cfg.norm_eps), cfg)
+        x = x + y
+        if collect:
+            cache["ssm"] = state
+            cache["conv"] = conv_tail
+    else:
+        raise ValueError(kind)
+    return x, cache, aux
+
+
+def forward(
+    params: Params,
+    tokens: jax.Array,
+    cfg,
+    extra: Optional[Dict[str, Any]] = None,
+    collect_caches: bool = False,
+    remat: bool = False,
+):
+    """Full-sequence pass.  Returns (hidden [b,s,d], caches_by_pos, aux).
+
+    ``extra["act_constraint"]`` (optional): callable applied to the residual
+    stream between layer periods — used by the distributed step builders for
+    sequence-parallel sharding (§Perf Y3).
+    """
+    period, n_periods = period_pattern(cfg)
+    dec_kinds = tuple("encdec" if cfg.encoder_layers else k for k in period)
+    x = embed_tokens(params, tokens, cfg, extra)
+    if cfg.family == "audio":
+        x = x + sinusoidal_at(jnp.arange(x.shape[1]), cfg.d_model).astype(x.dtype)
+    positions = jnp.arange(x.shape[1])
+    enc_out = None
+    if cfg.encoder_layers:
+        enc_out = extra["enc_out"] if "enc_out" in (extra or {}) else run_encoder(params, extra["encoder_frames"], cfg)
+    shared_attn = params.get("shared_attn")
+    moe_ctx = (extra or {}).get("moe_ctx")
+
+    act_constraint = (extra or {}).get("act_constraint")
+
+    def body(carry, block_params):
+        x, lb = carry
+        caches = {}
+        for pos, kind in enumerate(dec_kinds):
+            lp = block_params[f"pos{pos}"]
+            x, cache, aux = _layer_full(
+                kind, lp, x, cfg, positions, shared_attn, enc_out, moe_ctx, collect_caches
+            )
+            if cache:
+                caches[f"pos{pos}"] = cache
+            if "lb_loss" in aux:
+                lb = lb + aux["lb_loss"]
+        if act_constraint is not None:
+            x = act_constraint(x)
+        return (x, lb), caches
+
+    if remat:
+        body = jax.checkpoint(body)
+    (x, lb_total), caches = jax.lax.scan(body, (x, jnp.float32(0.0)), params["blocks"])
+    aux = {"lb_loss": lb_total / max(1, cfg.num_layers), "enc_out": enc_out}
+    return x, caches, aux
+
+
+# ---------------------------------------------------------------------------
+# Decode step
+# ---------------------------------------------------------------------------
+
+
+def decode_step(
+    params: Params,
+    tokens: jax.Array,  # [b, 1]
+    caches: Dict[str, jax.Array],
+    cache_index: jax.Array,  # scalar
+    cfg,
+    extra: Optional[Dict[str, Any]] = None,
+    unroll: bool = False,
+):
+    """One-token decode.  Returns (logits [b, vocab], new caches)."""
+    period, n_periods = period_pattern(cfg)
+    dec_kinds = tuple("encdec" if cfg.encoder_layers else k for k in period)
+    x = embed_tokens(params, tokens, cfg, extra)
+    if cfg.family == "audio":
+        pos = cache_index if jnp.ndim(cache_index) == 1 else jnp.full((1,), cache_index)
+        pe = sinusoidal_at(pos, cfg.d_model).astype(x.dtype)  # [b or 1, d]
+        x = x + pe[:, None, :]
+    enc_out = caches.get("enc_out")
+    shared_attn = params.get("shared_attn")
+    moe_ctx = (extra or {}).get("moe_ctx")
+
+    # group cache arrays by period: [n_X, ...] -> [n_periods, per_period, ...]
+    def regroup(name):
+        a = caches[name]
+        return a.reshape(n_periods, a.shape[0] // n_periods, *a.shape[1:])
+
+    scan_caches = {
+        k: regroup(k) for k in caches if k not in ("enc_out",)
+    }
+
+    # static per-kind position counters inside one period
+    def body(x, scanned):
+        counters = {"full": 0, "local": 0, "hybrid": 0, "ssm": 0}
+
+        def upd(name, idx, val):
+            # functional per-period update of cache slice `name` at sub-index idx
+            scanned[name] = scanned[name].at[idx].set(val)
+
+        def attn_dec(attn_p, h, suffix, i, window=None):
+            kk, vk = f"kv_k{suffix}", f"kv_v{suffix}"
+            if cfg.kv_quant:
+                h, ck, cv, ks, vs = attn_mod.attention_decode(
+                    attn_p, h, scanned[kk][i], scanned[vk][i], cache_index, cfg,
+                    window=window,
+                    k_scale=scanned[kk + "_scale"][i], v_scale=scanned[vk + "_scale"][i],
+                )
+                upd(kk + "_scale", i, ks)
+                upd(vk + "_scale", i, vs)
+            else:
+                h, ck, cv = attn_mod.attention_decode(
+                    attn_p, h, scanned[kk][i], scanned[vk][i], cache_index, cfg, window=window
+                )
+            upd(kk, i, ck)
+            upd(vk, i, cv)
+            return h
+
+        for pos, kind in enumerate(dec_kinds):
+            lp = scanned["blocks"][f"pos{pos}"]
+            if kind in ("dense", "moe", "encdec"):
+                i = counters["full"]
+                counters["full"] += 1
+                h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+                h = attn_dec(lp["attn"], h, "", i)
+                x = x + h
+                if kind == "encdec":
+                    hx = rmsnorm(lp["ln_x"], x, cfg.norm_eps)
+                    x = x + attn_mod.attention_cross(lp["xattn"], hx, enc_out, cfg)
+                h2 = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+                if kind == "moe":
+                    x = x + moe_mod.moe_layer(lp["moe"], h2, cfg, **(moe_ctx or {}))
+                else:
+                    x = x + ffn_mod.ffn(lp["ffn"], h2, cfg.ffn_activation)
+            elif kind == "dense_local":
+                i = counters["local"]
+                counters["local"] += 1
+                h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+                h = attn_dec(lp["attn"], h, "_local", i, window=cfg.sliding_window)
+                x = x + h
+                x = x + ffn_mod.ffn(lp["ffn"], rmsnorm(lp["ln2"], x, cfg.norm_eps), cfg.ffn_activation)
+            elif kind in ("ssm", "ssm_hybrid"):
+                if kind == "ssm_hybrid":
+                    j = counters["hybrid"]
+                    counters["hybrid"] += 1
+                    h = rmsnorm(shared_attn["ln1"], x, cfg.norm_eps)
+                    h = attn_dec(shared_attn["attn"], h, "_hybrid", j)
+                    x = x + h
+                    x = x + ffn_mod.ffn(
+                        shared_attn["ffn"], rmsnorm(shared_attn["ln2"], x, cfg.norm_eps), cfg.ffn_activation
+                    )
+                i = counters["ssm"]
+                counters["ssm"] += 1
+                y, cc, cs = ssm_mod.mamba_step(
+                    lp["mamba"], rmsnorm(lp["ln1"], x, cfg.norm_eps),
+                    scanned["conv_state"][i], scanned["ssm_state"][i], cfg,
+                )
+                upd("conv_state", i, cc)
+                upd("ssm_state", i, cs)
+                x = x + y
+        ys = {k: scanned[k] for k in scan_caches}
+        return x, ys
+
+    scanned_in = dict(scan_caches)
+    scanned_in["blocks"] = params["blocks"]
+
+    def scan_body(x, scanned):
+        return body(x, dict(scanned))
+
+    if unroll:
+        # §Perf P1: unrolled layer loop — lax.scan double-buffers the cache
+        # xs/ys (≥2 extra full-cache copies in temps); the unrolled form with
+        # slice+stack measured 32.6 GiB/dev vs 36.2 (scan) and 36.5 (in-place
+        # .at[i].set chain — §Perf P2, refuted: serialises buffer versions).
+        outs = {k: [] for k in scan_caches}
+        for i in range(n_periods):
+            sl = {k: jax.tree.map(lambda a: a[i], v) for k, v in scanned_in.items()}
+            x, ys = scan_body(x, sl)
+            for k in outs:
+                outs[k].append(ys[k])
+        new_caches = {k: jnp.stack(v) for k, v in outs.items()}
+    else:
+        x, new_caches = jax.lax.scan(scan_body, x, scanned_in)
+    out_caches = {
+        k: v.reshape(caches[k].shape) for k, v in new_caches.items()
+    }
+    if enc_out is not None:
+        out_caches["enc_out"] = enc_out
+    logits = lm_head(params, x[:, 0, :], cfg)
+    return logits, out_caches
+
+
+# ---------------------------------------------------------------------------
+# Prefill: full pass + cache construction
+# ---------------------------------------------------------------------------
+
+
+def prefill(
+    params: Params,
+    tokens: jax.Array,  # [b, s]
+    cfg,
+    cache_len: int,
+    extra: Optional[Dict[str, Any]] = None,
+):
+    """Returns (last-token logits [b, vocab], caches sized for cache_len)."""
+    period, n_periods = period_pattern(cfg)
+    dec_kinds = tuple("encdec" if cfg.encoder_layers else k for k in period)
+    b, s = tokens.shape
+    x, caches_by_pos, aux = forward(params, tokens, cfg, extra=extra, collect_caches=True)
+    logits = lm_head(params, x[:, -1, :], cfg)
+
+    out: Dict[str, jax.Array] = {}
+
+    def stack_kv(sel):
+        ks, vs = [], []
+        for pos in sel:
+            k, v = caches_by_pos[f"pos{pos}"]["kv"]
+            ks.append(k)  # [n_periods, b, s, nkv, hd]
+            vs.append(v)
+        # interleave positions back into layer order
+        K = jnp.stack(ks, axis=1).reshape(-1, b, s, cfg.num_kv_heads, cfg.resolved_head_dim)
+        V = jnp.stack(vs, axis=1).reshape(-1, b, s, cfg.num_kv_heads, cfg.resolved_head_dim)
+        return K, V
+
+    full_pos = [p for p, k in enumerate(dec_kinds) if k in ("dense", "moe", "encdec")]
+    local_pos = [p for p, k in enumerate(dec_kinds) if k == "dense_local"]
+    hyb_pos = [p for p, k in enumerate(dec_kinds) if k == "ssm_hybrid"]
+    ssm_pos = [p for p, k in enumerate(dec_kinds) if k.startswith("ssm")]
+
+    def pad_to(K, L):
+        if K.shape[2] == L:
+            return K
+        padded = jnp.zeros((K.shape[0], b, L, *K.shape[3:]), K.dtype)
+        return jax.lax.dynamic_update_slice_in_dim(padded, K[:, :, :L], 0, axis=2)
+
+    def emit(name, K, V):
+        if cfg.kv_quant:
+            out[f"kv_k{name}"], out[f"kv_k{name}_scale"] = attn_mod.quantize_kv(K)
+            out[f"kv_v{name}"], out[f"kv_v{name}_scale"] = attn_mod.quantize_kv(V)
+        else:
+            out[f"kv_k{name}"], out[f"kv_v{name}"] = K, V
+
+    if full_pos:
+        K, V = stack_kv(full_pos)
+        emit("", pad_to(K, cache_len), pad_to(V, cache_len))
+    if local_pos:
+        W = min(cache_len, cfg.sliding_window or cache_len)
+        K, V = stack_kv(local_pos)
+        # rolling layout: entry at absolute position p lives in slot p % W
+        take = min(W, s)
+        pos_abs = jnp.arange(take) + max(0, s - take)
+        slots = pos_abs % W
+        Kp = jnp.zeros((K.shape[0], b, W, *K.shape[3:]), K.dtype).at[:, :, slots].set(K[:, :, -take:])
+        Vp = jnp.zeros((V.shape[0], b, W, *V.shape[3:]), V.dtype).at[:, :, slots].set(V[:, :, -take:])
+        emit("_local", Kp, Vp)
+    if hyb_pos:
+        K, V = stack_kv(hyb_pos)
+        emit("_hybrid", pad_to(K, cache_len), pad_to(V, cache_len))
+    if ssm_pos:
+        states = [caches_by_pos[f"pos{p}"]["ssm"] for p in ssm_pos]
+        S = jnp.stack(states, axis=1)  # [n_periods, n_pos, ...]
+        out["ssm_state"] = S.reshape(-1, *S.shape[2:]).astype(jnp.float32)
+        tails = [caches_by_pos[f"pos{p}"]["conv"] for p in ssm_pos]
+        T = jnp.stack(tails, axis=1)
+        out["conv_state"] = T.reshape(-1, *T.shape[2:]).astype(x.dtype)
+    if aux.get("enc_out") is not None:
+        out["enc_out"] = aux["enc_out"]
+    return logits, out

@@ -1,0 +1,209 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in seconds (DESIGN.md / prompt spec):
+
+    compute    = HLO_FLOPs   / (chips × peak_FLOP/s)
+    memory     = HLO_bytes   / (chips × HBM_bw)
+    collective = coll_bytes  / (chips × link_bw)
+
+``cost_analysis`` of an SPMD-compiled executable reports *per-device* flops
+and bytes, so we scale by the device count to get the cluster totals the
+formulas above divide back down (equivalently: per-device values divided by
+per-chip peaks).  Collective bytes are parsed from the compiled (partitioned)
+HLO text: the result-shape bytes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute op, which are per-device
+quantities.
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (we count ~3 usable links, but report the single-link figure the prompt
+specifies for the collective term)."""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # bytes/s per chip
+LINK_BW = 50e9  # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# result shapes like `bf16[2,128]{1,0}` or tuples `(f32[8]{0}, f32[8]{0})`
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-device bytes moved by each collective kind (result-shape basis)."""
+    out = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.+?)\s+([\w-]+)\(", stripped)
+        if not m:
+            continue
+        result_shape, opname = m.groups()
+        for kind in _COLLECTIVES:
+            if opname == kind or opname.startswith(kind + "-"):
+                out[kind] += _shape_bytes(result_shape)
+                out["count"] += 1
+                break
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    collective_breakdown: Dict[str, int]
+    peak_memory_per_device: float
+    model_flops: float  # 6·N_active·D analytic
+    # XLA's cost_analysis counts a while-loop body ONCE, not × trip count
+    # (verified by calibration: a bare sharded matmul reports exactly
+    # 2MNK/devices, but a scan over L layer-periods reports ≈ 1/L of the true
+    # cost).  All our step functions put the layer stack in a scan, so the
+    # three terms are scaled by the period count (the dominant loop).  Inner
+    # loops (SSM time scan, q-chunk map) are still counted once — noted in
+    # EXPERIMENTS.md §Roofline.
+    loop_scale: float = 1.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device * self.loop_scale / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device * self.loop_scale / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes_per_device * self.loop_scale / LINK_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        total = self.flops_per_device * self.loop_scale * self.chips
+        return self.model_flops / total if total > 0 else 0.0
+
+    def to_dict(self) -> Dict:
+        return {
+            "arch": self.arch,
+            "shape": self.shape,
+            "mesh": self.mesh,
+            "chips": self.chips,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "collective_breakdown": self.collective_breakdown,
+            "peak_memory_per_device": self.peak_memory_per_device,
+            "model_flops": self.model_flops,
+            "loop_scale": self.loop_scale,
+            "t_compute": self.t_compute,
+            "t_memory": self.t_memory,
+            "t_collective": self.t_collective,
+            "dominant": self.dominant,
+            "useful_flops_ratio": self.useful_flops_ratio,
+        }
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS: 6·N·D (dense) / 6·N_active·D (MoE) for training;
+    2·N·D for a forward-only step (prefill), 2·N_active per decoded token."""
+    pc = cfg.param_counts()
+    n_dense = pc["attn"] + pc["ffn"] + pc["ssm"] + pc["norm"] + pc["embed"]
+    if cfg.has_moe:
+        active_frac = cfg.top_k / max(1, cfg.num_experts)
+        n_active = n_dense + pc["expert"] * active_frac
+    else:
+        n_active = n_dense
+    if shape.kind == "train":
+        per_tok = 6.0 * n_active
+        tokens = shape.global_batch * shape.seq_len
+    elif shape.kind == "prefill":
+        per_tok = 2.0 * n_active
+        tokens = shape.global_batch * shape.seq_len
+    else:  # decode: one token per sequence
+        per_tok = 2.0 * n_active
+        tokens = shape.global_batch
+    return per_tok * tokens
+
+
+def analyze(
+    arch: str,
+    shape_name: str,
+    mesh_name: str,
+    chips: int,
+    cost: Dict[str, float],
+    hlo_text: str,
+    mem: Optional[object],
+    model_flops: float,
+    loop_scale: float = 1.0,
+) -> RooflineTerms:
+    coll = collective_bytes(hlo_text)
+    coll_total = sum(v for k, v in coll.items() if k != "count")
+    peak_mem = 0.0
+    if mem is not None:
+        peak_mem = float(
+            getattr(mem, "temp_size_in_bytes", 0)
+            + getattr(mem, "argument_size_in_bytes", 0)
+            + getattr(mem, "output_size_in_bytes", 0)
+            - getattr(mem, "alias_size_in_bytes", 0)
+        )
+    return RooflineTerms(
+        arch=arch,
+        shape=shape_name,
+        mesh=mesh_name,
+        chips=chips,
+        flops_per_device=float(cost.get("flops", 0.0)),
+        bytes_per_device=float(cost.get("bytes accessed", 0.0)),
+        collective_bytes_per_device=float(coll_total),
+        collective_breakdown=coll,
+        peak_memory_per_device=peak_mem,
+        model_flops=model_flops,
+        loop_scale=loop_scale,
+    )
+
+
+def save(terms: RooflineTerms, path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(terms.to_dict(), f, indent=1)

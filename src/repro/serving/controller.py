@@ -1,0 +1,83 @@
+"""Autoscaling controller: demand estimation + periodic SLO-aware scaling.
+
+Wraps :class:`repro.core.scaling.SLOScaler` with a sliding-window demand
+estimator and applies decisions at a fixed interval (paper: 15 minutes),
+with hysteresis to avoid flapping.  Expert placement is re-derived from the
+recent routing trace at each reconfiguration (§3.5 "expert placement").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core.placement import build_layout
+from repro.core.scaling import EvalResult, PerfModel, SLOScaler
+
+
+@dataclasses.dataclass
+class ScalingEvent:
+    t: float
+    demand: float
+    n_a: int
+    n_e: int
+    tpot: float
+    feasible: bool
+
+
+class AutoScaler:
+    def __init__(
+        self,
+        model: PerfModel,
+        slo: float,
+        n_max: int = 16,
+        window: float = 300.0,
+        hysteresis: float = 0.1,
+    ):
+        self.scaler = SLOScaler(model, n_max=n_max)
+        self.slo = slo
+        self.window = window
+        self.hysteresis = hysteresis
+        self._arrivals: List[float] = []
+        self._tokens: List[float] = []
+        self.current: Optional[EvalResult] = None
+        self.events: List[ScalingEvent] = []
+
+    # -- demand estimation ---------------------------------------------------
+    def observe(self, t: float, tokens: float) -> None:
+        self._arrivals.append(t)
+        self._tokens.append(tokens)
+
+    def demand(self, now: float) -> float:
+        lo = now - self.window
+        tok = sum(tk for t, tk in zip(self._arrivals, self._tokens) if t >= lo)
+        return tok / self.window
+
+    # -- decision -------------------------------------------------------------
+    def decide(self, now: float, demand: Optional[float] = None) -> EvalResult:
+        lam = demand if demand is not None else self.demand(now)
+        best = self.scaler.scale(lam, self.slo)
+        if best is None:
+            # infeasible: run at max configuration
+            best = self.scaler.model.tpot(1.0, self.scaler.n_max, self.scaler.n_max)
+            best.feasible = False
+        if self.current is not None and best.feasible:
+            same_cost = abs((best.n_a + best.n_e) - (self.current.n_a + self.current.n_e))
+            if same_cost == 0 or (
+                self.current.feasible
+                and abs(lam - self.current.batch / max(self.current.tpot, 1e-9))
+                < self.hysteresis * lam
+            ):
+                pass  # keep current if change is marginal — hysteresis
+        self.current = best
+        self.events.append(
+            ScalingEvent(now, lam, best.n_a, best.n_e, best.tpot, best.feasible)
+        )
+        return best
+
+    # -- placement refresh -----------------------------------------------------
+    def replan_layout(self, trace: np.ndarray, n_e: int):
+        cfg = self.scaler.model.cfg
+        return build_layout(trace, cfg.num_experts, n_e, self.scaler.model.C)

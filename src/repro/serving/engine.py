@@ -1,0 +1,175 @@
+"""Continuous-batching decode engine with the Janus scheduled-MoE path.
+
+The engine serves a stream of requests against one model deployment:
+
+  * admission: waiting requests are prefetched into free batch slots
+    (per-request prefill, scattered into the batched caches);
+  * decode: one batched ``decode_step`` per iteration with *per-slot*
+    positions (continuous batching — slots join/leave independently);
+  * MoE architectures route through the scheduled slot path: routing →
+    AEBS (or a baseline scheduler) → replica-slot dispatch, with per-layer
+    ``a_max`` telemetry surfaced to the controller;
+  * timing: wall-clock by default, or a pluggable ``step_time_fn`` driven by
+    the analytic performance model (used in tests and the simulator).
+
+This is the pool-agnostic core; device placement (attention pool vs MoE
+pool) is applied by the caller (see examples/serve_disaggregated.py and the
+SPMD serve_step in repro/launch/steps.py).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aebs import ReplicaLayout, aebs_assign
+from repro.core import baselines
+from repro.kernels.aebs.ops import aebs_schedule
+from repro.models import model as model_mod
+from repro.models import transformer
+from repro.serving.kv_cache import SlotManager, scatter_prefill_caches
+from repro.serving.request import Request
+
+SCHEDULERS = {
+    "aebs": aebs_assign,
+    "aebs_kernel": lambda e, t, n: aebs_schedule(e, t, n),  # Pallas TPU kernel
+    "random": baselines.random_assign,
+    "token_hash": baselines.token_hash_assign,
+    "none": None,
+}
+
+
+class ServingEngine:
+    def __init__(
+        self,
+        cfg,
+        params,
+        *,
+        max_batch: int = 8,
+        cache_len: int = 512,
+        layout: Optional[ReplicaLayout] = None,
+        scheduler: str = "aebs",
+        capacity_tokens: Optional[int] = None,
+        step_time_fn: Optional[Callable[[int], float]] = None,
+        extra_builder: Optional[Callable[[int], Dict]] = None,
+    ):
+        self.cfg = cfg
+        self.params = params
+        self.slots = SlotManager(max_batch, cache_len)
+        self.cache_len = cache_len
+        self.max_batch = max_batch
+        self.layout = layout
+        self.scheduler_name = scheduler
+        self.step_time_fn = step_time_fn
+        self.extra_builder = extra_builder
+        self.caches = model_mod.init_decode_caches(cfg, max_batch, cache_len)
+        self.tokens = jnp.zeros((max_batch, 1), jnp.int32)
+        self.clock = 0.0
+        self.amax_log: List[int] = []
+        self.completed: List[Request] = []
+
+        moe_ctx = None
+        if cfg.has_moe and layout is not None and scheduler != "none":
+            moe_ctx = dict(
+                dispatch="scatter",
+                layout_tables=layout.device_tables(),
+                slot_to_expert=jnp.asarray(layout.slot_to_expert.reshape(-1)),
+                num_instances=layout.num_instances,
+                scheduler=SCHEDULERS[scheduler],
+                capacity=capacity_tokens,
+            )
+        self._moe_ctx = moe_ctx
+
+        def _decode(params, tokens, caches, positions):
+            extra = {"moe_ctx": moe_ctx} if moe_ctx else None
+            return model_mod.decode_step(params, tokens, caches, positions, cfg, extra=extra)
+
+        self._decode_jit = jax.jit(_decode)
+
+        def _prefill(params, tokens, extra):
+            return model_mod.prefill(params, tokens, cfg, cache_len, extra=extra)
+
+        self._prefill_jit = jax.jit(_prefill)
+
+    # ------------------------------------------------------------------
+    def _prefill_request(self, req: Request) -> None:
+        slot = self.slots.admit(req)
+        prompt = req.prompt
+        if prompt is None:
+            rng = np.random.default_rng(req.rid)
+            prompt = rng.integers(0, self.cfg.vocab_size, size=req.input_len, dtype=np.int32)
+        toks = jnp.asarray(prompt, jnp.int32)[None, :]
+        extra = self.extra_builder(1) if self.extra_builder else None
+        t0 = time.perf_counter()
+        logits, one_caches = self._prefill_jit(self.params, toks, extra)
+        logits.block_until_ready()
+        dt = time.perf_counter() - t0
+        self.caches = scatter_prefill_caches(self.caches, one_caches, slot)
+        first = int(np.argmax(np.asarray(logits[0])))
+        self.tokens = self.tokens.at[slot, 0].set(first)
+        self.clock += dt if self.step_time_fn is None else 0.0
+        req.prefill_done = self.clock
+        req.token_times.append(self.clock)
+
+    # ------------------------------------------------------------------
+    def _decode_iteration(self) -> None:
+        positions = self.slots.positions_device()
+        t0 = time.perf_counter()
+        logits, self.caches = self._decode_jit(self.params, self.tokens, self.caches, positions)
+        logits.block_until_ready()
+        wall = time.perf_counter() - t0
+        self.clock += self.step_time_fn(self.slots.num_active) if self.step_time_fn else wall
+
+        next_tokens = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        new = self.tokens
+        for s in self.slots.active_slots:
+            req = self.slots.slot_req[s]
+            req.generated += 1
+            req.token_times.append(self.clock)
+            self.slots.advance(s)
+            new = new.at[s, 0].set(int(next_tokens[s]))
+            if req.generated >= req.output_len or self.slots.positions[s] >= self.cache_len - 2:
+                req.finished = self.clock
+                self.completed.append(self.slots.release(s))
+        self.tokens = new
+
+    # ------------------------------------------------------------------
+    def run(self, requests: List[Request], max_steps: int = 100_000) -> Dict:
+        """Serve all requests (arrivals gated by the engine clock)."""
+        waiting = sorted(requests, key=lambda r: r.arrival)
+        steps = 0
+        while (waiting or self.slots.num_active) and steps < max_steps:
+            # admit arrived requests into free slots
+            while waiting and waiting[0].arrival <= self.clock and self.slots.free_slots:
+                self._prefill_request(waiting.pop(0))
+            if self.slots.num_active == 0:
+                if waiting:  # idle: jump to next arrival
+                    self.clock = max(self.clock, waiting[0].arrival)
+                    continue
+                break
+            self._decode_iteration()
+            steps += 1
+        return self.metrics()
+
+    # ------------------------------------------------------------------
+    def metrics(self) -> Dict:
+        done = self.completed
+        total_tokens = sum(r.generated for r in done)
+        if not done:
+            return {"completed": 0, "tokens": 0}
+        gaps = np.concatenate(
+            [np.diff(r.token_times) for r in done if len(r.token_times) > 1]
+        )
+        span = max(r.finished for r in done) - min(r.arrival for r in done)
+        return {
+            "completed": len(done),
+            "tokens": total_tokens,
+            "throughput_tok_s": total_tokens / max(span, 1e-9),
+            "tpot_mean": float(gaps.mean()) if len(gaps) else 0.0,
+            "tpot_p99": float(np.percentile(gaps, 99)) if len(gaps) else 0.0,
+            "clock": self.clock,
+        }

@@ -1,0 +1,86 @@
+"""Slot-based batched cache manager for continuous-batching decode.
+
+The engine holds model caches with a fixed ``max_batch`` of request slots
+(batch axis 1 of every cache array).  The manager tracks slot occupancy and
+per-slot positions; a freed slot is immediately reusable because attention
+masks are position-bounded per request.
+
+Inactive slots park their write position at ``cache_len - 1`` (a reserved
+scratch entry no live context may reach), so the batched decode step can run
+unconditionally without corrupting live entries.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.request import Request
+
+
+@dataclasses.dataclass
+class SlotManager:
+    max_batch: int
+    cache_len: int
+
+    def __post_init__(self):
+        self.slot_req: List[Optional[Request]] = [None] * self.max_batch
+        self.positions = np.full(self.max_batch, self.cache_len - 1, np.int32)
+
+    @property
+    def free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    @property
+    def active_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is not None]
+
+    @property
+    def num_active(self) -> int:
+        return len(self.active_slots)
+
+    def admit(self, req: Request) -> int:
+        free = self.free_slots
+        if not free:
+            raise RuntimeError("no free slot")
+        s = free[0]
+        self.slot_req[s] = req
+        req.slot = s
+        self.positions[s] = req.input_len
+        return s
+
+    def advance(self, slot: int) -> None:
+        self.positions[slot] += 1
+
+    def release(self, slot: int) -> Request:
+        req = self.slot_req[slot]
+        self.slot_req[slot] = None
+        self.positions[slot] = self.cache_len - 1
+        return req
+
+    def positions_device(self) -> jax.Array:
+        return jnp.asarray(self.positions)
+
+    def active_mask(self) -> np.ndarray:
+        return np.array([r is not None for r in self.slot_req])
+
+
+def scatter_prefill_caches(
+    batch_caches: Dict[str, jax.Array],
+    one_caches: Dict[str, jax.Array],
+    slot: int,
+) -> Dict[str, jax.Array]:
+    """Write a single-request prefill cache (batch dim 1) into slot ``slot``
+    of the batched caches.  Batch axis is 1 for stacked caches, 0 for
+    ``enc_out``."""
+    out = dict(batch_caches)
+    for k, v in one_caches.items():
+        if k == "enc_out":
+            out[k] = batch_caches[k].at[slot].set(v[0])
+        else:
+            out[k] = batch_caches[k].at[:, slot].set(v[:, 0])
+    return out

@@ -1,0 +1,65 @@
+"""Request model + workload generation (ShareGPT-like lengths, §5.1)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    arrival: float  # seconds
+    input_len: int
+    output_len: int  # target generation length
+    prompt: Optional[np.ndarray] = None  # token ids (synthetic)
+    # runtime state
+    slot: int = -1
+    prefill_done: float = -1.0
+    generated: int = 0
+    token_times: Optional[List[float]] = None
+    finished: float = -1.0
+
+    def tpot_p(self, q: float) -> float:
+        """Per-token latency percentile over the decode phase."""
+        if not self.token_times or len(self.token_times) < 2:
+            return 0.0
+        gaps = np.diff(self.token_times)
+        return float(np.percentile(gaps, q))
+
+
+@dataclasses.dataclass
+class WorkloadSpec:
+    """ShareGPT-replay style lengths (paper: avg input 16, avg output 256)."""
+
+    mean_input: float = 16.0
+    mean_output: float = 256.0
+    vocab_size: int = 32_000
+    max_input: int = 512
+    max_output: int = 2048
+    seed: int = 0
+
+
+def sample_requests(
+    spec: WorkloadSpec, arrivals: np.ndarray, with_prompts: bool = False
+) -> List[Request]:
+    """One request per arrival time, lengths from lognormal fits (heavy tail,
+    as observed in ShareGPT traces)."""
+    rng = np.random.default_rng(spec.seed)
+    n = len(arrivals)
+    # lognormal with sigma≈1 → heavy-tailed; scale to requested means
+    ins = rng.lognormal(mean=0.0, sigma=1.0, size=n)
+    ins = np.clip((ins / ins.mean() * spec.mean_input).astype(int) + 1, 1, spec.max_input)
+    outs = rng.lognormal(mean=0.0, sigma=1.0, size=n)
+    outs = np.clip((outs / outs.mean() * spec.mean_output).astype(int) + 1, 1, spec.max_output)
+    reqs = []
+    for i, t in enumerate(np.sort(arrivals)):
+        prompt = None
+        if with_prompts:
+            prompt = rng.integers(0, spec.vocab_size, size=int(ins[i]), dtype=np.int32)
+        reqs.append(
+            Request(rid=i, arrival=float(t), input_len=int(ins[i]), output_len=int(outs[i]), prompt=prompt, token_times=[])
+        )
+    return reqs

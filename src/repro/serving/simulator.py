@@ -1,0 +1,97 @@
+"""Trace-driven cluster simulator (Fig. 11) — the paper's method for the
+24-hour scaling study: "we evaluate scaling behavior through trace-driven
+simulation using the measured performance of various systems".
+
+Given a rate profile (15-minute windows), each policy picks a configuration
+per window using the shared performance model; the simulator accumulates
+GPU-hours and SLO attainment."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.baselines import (
+    CoupledPolicy,
+    FixedUnitPolicy,
+    MonolithicPolicy,
+    PolicyDecision,
+)
+from repro.core.scaling import PerfModel, SLOScaler
+
+
+@dataclasses.dataclass
+class WindowRecord:
+    t: float
+    demand: float
+    n_a: int
+    n_e: int
+    total_gpus: int
+    tpot: float
+    slo_ok: bool
+
+
+@dataclasses.dataclass
+class SimResult:
+    records: List[WindowRecord]
+
+    @property
+    def gpu_hours(self) -> float:
+        if not self.records:
+            return 0.0
+        dt_h = np.diff([r.t for r in self.records] + [2 * self.records[-1].t - self.records[-2].t]).mean() / 3600.0
+        return float(sum(r.total_gpus for r in self.records) * dt_h)
+
+    @property
+    def slo_attainment(self) -> float:
+        if not self.records:
+            return 0.0
+        return float(np.mean([r.slo_ok for r in self.records]))
+
+
+class ClusterSimulator:
+    """Replays a rate profile through a scaling policy."""
+
+    def __init__(self, model: PerfModel, slo: float, n_max: int = 32):
+        self.model = model
+        self.slo = slo
+        self.n_max = n_max
+
+    def run_janus(self, window_starts, rates, tokens_per_req: float) -> SimResult:
+        scaler = SLOScaler(self.model, n_max=self.n_max)
+        recs = []
+        for t, r in zip(window_starts, rates):
+            lam = r * tokens_per_req
+            best = scaler.scale(lam, self.slo)
+            if best is None:
+                n_a = n_e = self.n_max
+                ev = self.model.tpot(1.0, n_a, n_e)
+                recs.append(WindowRecord(t, lam, n_a, n_e, n_a + n_e, ev.tpot, False))
+            else:
+                recs.append(
+                    WindowRecord(t, lam, best.n_a, best.n_e, best.n_a + best.n_e, best.tpot, best.tpot <= self.slo)
+                )
+        return SimResult(recs)
+
+    def run_policy(self, policy, window_starts, rates, tokens_per_req: float) -> SimResult:
+        scaler = SLOScaler(self.model, n_max=self.n_max)
+        recs = []
+        for t, r in zip(window_starts, rates):
+            lam = r * tokens_per_req
+            d: PolicyDecision = policy.decide(scaler, lam, self.slo)
+            ev = scaler.evaluate(lam, self.slo, d.n_a, d.n_e)
+            tpot = ev.tpot if ev is not None else float("inf")
+            recs.append(
+                WindowRecord(t, lam, d.n_a, d.n_e, d.total_gpus, tpot, d.feasible and tpot <= self.slo)
+            )
+        return SimResult(recs)
+
+    def compare(self, window_starts, rates, tokens_per_req: float) -> Dict[str, SimResult]:
+        return {
+            "janus": self.run_janus(window_starts, rates, tokens_per_req),
+            "sglang": self.run_policy(MonolithicPolicy(), window_starts, rates, tokens_per_req),
+            "megascale": self.run_policy(CoupledPolicy(), window_starts, rates, tokens_per_req),
+            "xdeepserve": self.run_policy(FixedUnitPolicy(), window_starts, rates, tokens_per_req),
+        }

@@ -1,0 +1,206 @@
+"""Partition-spec rules for every parameter / input of every architecture.
+
+Strategy (DESIGN.md §5):
+  * batch-like axes → the data axes ("pod","data") when divisible;
+  * Megatron-style tensor parallelism over the "model" axis for dense layers:
+    shard the widest weight axis that divides by the model-axis size,
+    preferring structured axes (heads, d_ff, experts, vocab) and falling back
+    to the contraction axis (input d_model → psum'd partials) or replication;
+  * expert weights shard on the expert/slot axis when divisible (expert
+    parallelism — the MoE pool), else on d_ff;
+  * decode caches shard batch over data axes and kv-heads over model when
+    divisible, else the sequence axis (context parallelism — the long_500k
+    path where batch = 1).
+
+Everything returns plain ``PartitionSpec`` trees; ``NamedSharding`` binding
+happens in ``repro.launch.steps``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+
+
+def _div(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for p in path:
+        if hasattr(p, "key"):
+            names.append(str(p.key))
+        elif hasattr(p, "idx"):
+            names.append(str(p.idx))
+    return tuple(names)
+
+
+def param_pspec(
+    names: Tuple[str, ...],
+    shape: Tuple[int, ...],
+    cfg: ModelConfig,
+    n_model: int,
+    model_axis: str,
+    fsdp_axes: Tuple[str, ...] = (),
+    n_fsdp: int = 1,
+) -> P:
+    """PartitionSpec for one parameter leaf.
+
+    With ``fsdp_axes`` (training), a second weight axis is sharded over the
+    data axes so parameters *and optimizer moments* scale with the cluster
+    (GSPMD inserts the per-layer all-gathers; the shard_map MoE body gathers
+    manually).  Serving passes no fsdp axes: weights are replicated across
+    the data axes for latency (Janus attention instances hold full replicas).
+    """
+    stacked = "blocks" in names or "encoder" in names  # leading n_periods axis
+    off = 1 if stacked else 0
+    name = names[-1]
+    dims = shape[off:]
+
+    def spec(*entries):
+        return P(*(((None,) * off) + entries))
+
+    m = model_axis
+    f_ = fsdp_axes if fsdp_axes else None
+
+    def fs(dim):  # fsdp spec entry if divisible
+        return f_ if f_ and _div(dim, n_fsdp) else None
+
+    # --- embeddings ---------------------------------------------------------
+    if name == "embed":
+        if _div(shape[0], n_model):
+            return P(m, fs(shape[1]))
+        return P(None, fs(shape[1]))
+    # --- norms / small vectors ----------------------------------------------
+    if name in ("scale", "bias", "conv_b", "dt_bias", "A_log", "D", "norm_scale", "router"):
+        return P(*((None,) * len(shape)))
+    # --- attention ------------------------------------------------------------
+    if name in ("wq", "wk", "wv"):
+        nh = dims[1]
+        if _div(nh, n_model):
+            return spec(fs(dims[0]), m, None)
+        return spec(m, None, None)  # row-parallel on d_model (psum partials)
+    if name == "wo":
+        nh, hd = dims[0], dims[1]
+        if _div(nh, n_model):
+            return spec(m, None, fs(dims[2]))
+        if _div(hd, n_model):
+            return spec(None, m, fs(dims[2]))
+        return spec(None, None, fs(dims[2]))
+    # --- MoE expert weights (3D) / dense FFN (2D) -------------------------------
+    if name in ("w_gate", "w_up"):
+        if len(dims) == 3:  # [E or S_slots, d, f]
+            if _div(dims[0], n_model):
+                return spec(m, fs(dims[1]), None)
+            return spec(None, fs(dims[1]), m)
+        return spec(fs(dims[0]), m)  # [d, f]
+    if name == "w_down":
+        if len(dims) == 3:  # [E, f, d]
+            if _div(dims[0], n_model):
+                return spec(m, None, fs(dims[2]))
+            return spec(None, m, fs(dims[2]))
+        return spec(m, fs(dims[1]))  # [f, d]
+    # --- mamba -------------------------------------------------------------------
+    if name == "in_proj":  # [d, proj_out]
+        return spec(fs(dims[0]), m) if _div(dims[1], n_model) else spec(fs(dims[0]), None)
+    if name == "out_proj":  # [di, d]
+        return spec(m, fs(dims[1])) if _div(dims[0], n_model) else spec(None, fs(dims[1]))
+    if name == "x_proj":  # [di, dt_rank + 2N]
+        return spec(m, None) if _div(dims[0], n_model) else spec(None, None)
+    if name in ("conv_w", "dt_proj"):
+        return spec(*((None,) * len(dims)))
+    return P(*((None,) * len(shape)))
+
+
+def param_pspecs(cfg: ModelConfig, params_tree, mesh, fsdp: bool = False) -> Any:
+    n_model = mesh.shape.get("model", 1)
+    fsdp_axes = batch_axes(mesh) if fsdp else ()
+    n_fsdp = 1
+    for a in fsdp_axes:
+        n_fsdp *= mesh.shape[a]
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_pspec(
+            _path_names(path), leaf.shape, cfg, n_model, "model", fsdp_axes, n_fsdp
+        ),
+        params_tree,
+    )
+
+
+def batch_axes(mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def input_pspecs(
+    cfg: ModelConfig, shape: InputShape, specs: Dict[str, jax.ShapeDtypeStruct], mesh
+) -> Dict[str, P]:
+    """PartitionSpecs for the abstract inputs of (cfg, shape)."""
+    dp = batch_axes(mesh)
+    n_dp = 1
+    for a in dp:
+        n_dp *= mesh.shape[a]
+    n_model = mesh.shape.get("model", 1)
+    B = shape.global_batch
+    bspec = dp if _div(B, n_dp) and n_dp > 1 else None
+
+    out: Dict[str, P] = {}
+    for name, s in specs.items():
+        if name in ("tokens", "labels"):
+            out[name] = P(bspec, None)
+        elif name == "cache_index":
+            out[name] = P()
+        elif name.startswith("kv_") and name.endswith("_scale"):
+            # [L, B, S, nkv] — mirror the int8 cache sharding minus head_dim
+            nkv, S = s.shape[3], s.shape[2]
+            if _div(nkv, n_model):
+                out[name] = P(None, bspec, None, "model")
+            elif bspec is None and _div(S, n_dp * n_model):
+                out[name] = P(None, None, dp + ("model",), None)
+            elif bspec is None and _div(S, n_dp):
+                out[name] = P(None, None, dp, None)
+            elif _div(S, n_model):
+                out[name] = P(None, bspec, "model", None)
+            else:
+                out[name] = P(None, bspec, None, None)
+        elif name.startswith("kv_"):
+            # [L, B, S, nkv, hd]
+            nkv, S = s.shape[3], s.shape[2]
+            if _div(nkv, n_model):
+                out[name] = P(None, bspec, None, "model", None)
+            elif bspec is None and _div(S, n_dp * n_model):
+                # context parallelism for batch=1 long-context decode
+                out[name] = P(None, None, dp + ("model",), None, None)
+            elif bspec is None and _div(S, n_dp):
+                out[name] = P(None, None, dp, None, None)
+            elif _div(S, n_model):
+                # kv-heads don't divide the model axis → context-parallel
+                # within the model group instead (sequence axis)
+                out[name] = P(None, bspec, "model", None, None)
+            else:
+                out[name] = P(None, bspec, None, None, None)
+        elif name == "ssm_state":
+            # [L, B, di, N] (v1) or [L, B, H, hd, N] (v2)
+            inner = s.shape[2]
+            ispec = "model" if _div(inner, n_model) else None
+            out[name] = P(None, bspec, ispec, *((None,) * (len(s.shape) - 3)))
+        elif name == "conv_state":
+            # [L, B, K-1, conv_dim]
+            cspec = "model" if _div(s.shape[3], n_model) else None
+            out[name] = P(None, bspec, None, cspec)
+        elif name in ("enc_out", "encoder_frames", "patch_embeds"):
+            out[name] = P(bspec, None, None)
+        else:
+            out[name] = P(*((None,) * len(s.shape)))
+    return out
+
+
+def activation_pspec(cfg: ModelConfig, mesh, batch: int) -> P:
+    dp = batch_axes(mesh)
+    n_dp = 1
+    for a in dp:
+        n_dp *= mesh.shape[a]
+    return P(dp if _div(batch, n_dp) and n_dp > 1 else None, None, None)

@@ -1,0 +1,76 @@
+"""Minimal dependency-free checkpointing: flat-key npz of the param/opt pytree."""
+
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree, prefix="") -> Dict[str, np.ndarray]:
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        arr = np.asarray(tree)
+        if arr.dtype == jnp.bfloat16:
+            out[prefix[:-1] + "::bf16"] = arr.astype(np.float32)
+        else:
+            out[prefix[:-1]] = arr
+    return out
+
+
+def _unflatten(flat: Dict[str, np.ndarray]):
+    root: Dict[str, Any] = {}
+    for key, arr in flat.items():
+        if key.endswith("::bf16"):
+            key = key[: -len("::bf16")]
+            arr = jnp.asarray(arr, jnp.bfloat16)
+        parts = key.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = jnp.asarray(arr)
+    return _intify(root)
+
+
+def _intify(node):
+    """Convert {'0': .., '1': ..} dicts back to tuples."""
+    if isinstance(node, dict):
+        keys = list(node.keys())
+        if keys and all(k.isdigit() for k in keys):
+            return tuple(_intify(node[str(i)]) for i in range(len(keys)))
+        return {k: _intify(v) for k, v in node.items()}
+    return node
+
+
+def save_checkpoint(path: str, step: int, params, opt_state=None) -> str:
+    os.makedirs(path, exist_ok=True)
+    fname = os.path.join(path, f"ckpt_{step:08d}.npz")
+    flat = _flatten({"params": params})
+    if opt_state is not None:
+        flat.update(_flatten({"opt": {"step": opt_state.step, "mu": opt_state.mu, "nu": opt_state.nu}}))
+    np.savez(fname, **flat)
+    return fname
+
+
+def load_checkpoint(fname: str) -> Tuple[Any, Any]:
+    """Returns (params, opt_dict_or_None)."""
+    with np.load(fname) as z:
+        flat = {k: z[k] for k in z.files}
+    tree = _unflatten(flat)
+    return tree["params"], tree.get("opt")
+
+
+def latest_checkpoint(path: str):
+    if not os.path.isdir(path):
+        return None
+    cands = sorted(f for f in os.listdir(path) if f.startswith("ckpt_"))
+    return os.path.join(path, cands[-1]) if cands else None

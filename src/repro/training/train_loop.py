@@ -1,0 +1,71 @@
+"""Training loop: jit'd train_step (remat'd scan over layer periods) + driver."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as model_mod
+from repro.training.checkpoint import save_checkpoint
+from repro.training.data import DataConfig, TokenPipeline
+from repro.training.optimizer import AdamWConfig, OptState, adamw_update, init_opt_state
+
+
+def make_train_step(cfg, opt_cfg: AdamWConfig, remat: bool = True) -> Callable:
+    def train_step(params, opt_state: OptState, tokens, labels):
+        def loss(p):
+            return model_mod.loss_fn(p, tokens, labels, cfg, remat=remat)
+
+        (l, aux), grads = jax.value_and_grad(loss, has_aux=True)(params)
+        new_params, new_state, info = adamw_update(opt_cfg, params, grads, opt_state)
+        info = dict(info, loss=l, lb_loss=aux.get("lb_loss", jnp.float32(0.0)))
+        return new_params, new_state, info
+
+    return train_step
+
+
+def train(
+    cfg,
+    steps: int = 100,
+    batch_size: int = 8,
+    seq_len: int = 128,
+    seed: int = 0,
+    opt_cfg: Optional[AdamWConfig] = None,
+    ckpt_dir: Optional[str] = None,
+    ckpt_every: int = 0,
+    log_every: int = 10,
+    log_fn=print,
+) -> Dict:
+    opt_cfg = opt_cfg or AdamWConfig(total_steps=steps)
+    params = model_mod.init_params(cfg, seed)
+    opt_state = init_opt_state(params)
+    pipe = TokenPipeline(DataConfig(cfg.vocab_size, seq_len, batch_size, seed))
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg))
+
+    history = []
+    t0 = time.perf_counter()
+    for step in range(steps):
+        toks, labels = pipe.batch(step)
+        params, opt_state, info = step_fn(params, opt_state, jnp.asarray(toks), jnp.asarray(labels))
+        if step % log_every == 0 or step == steps - 1:
+            loss = float(info["loss"])
+            history.append((step, loss))
+            log_fn(
+                f"step {step:5d}  loss {loss:.4f}  lr {float(info['lr']):.2e}  "
+                f"gnorm {float(info['grad_norm']):.2f}"
+            )
+        if ckpt_dir and ckpt_every and (step + 1) % ckpt_every == 0:
+            save_checkpoint(ckpt_dir, step + 1, params, opt_state)
+    wall = time.perf_counter() - t0
+    if ckpt_dir:
+        save_checkpoint(ckpt_dir, steps, params, opt_state)
+    return {
+        "history": history,
+        "final_loss": history[-1][1] if history else float("nan"),
+        "first_loss": history[0][1] if history else float("nan"),
+        "wall_s": wall,
+        "params": params,
+    }

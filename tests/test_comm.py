@@ -1,0 +1,63 @@
+"""Adaptive two-phase communication model (§3.3) behavioural tests."""
+
+import pytest
+
+from repro.core.comm import (
+    H100,
+    TPU_V5E,
+    CommConfig,
+    adaptive_two_phase,
+    agate_cost,
+    layer_comm_time,
+    one_phase_cost,
+    two_phase_case1,
+    two_phase_case2,
+)
+
+
+def _cfg(m, n, B=256, d=4096, hw=H100):
+    return CommConfig(n_attn=m, n_moe=n, bytes_per_token=2 * d, batch=B, hw=hw)
+
+
+def test_two_phase_beats_one_phase_at_scale():
+    """§3.3: many small m×n transfers dominate — aggregation wins."""
+    for m, n in [(8, 16), (16, 32), (4, 12)]:
+        c = _cfg(m, n)
+        t2, _ = adaptive_two_phase(c)
+        assert t2 < one_phase_cost(c)
+
+
+def test_adaptive_picks_min():
+    for m, n in [(2, 2), (8, 8), (16, 64), (64, 8)]:
+        c = _cfg(m, n)
+        t, regime = adaptive_two_phase(c)
+        assert t == min(two_phase_case1(c), two_phase_case2(c))
+        assert regime in ("case1", "case2")
+
+
+def test_case2_wins_with_many_destinations():
+    """Fig. 6: large destination counts favour one-to-one + local multicast."""
+    big = _cfg(32, 64, B=2048)
+    assert two_phase_case2(big) < two_phase_case1(big)
+
+
+def test_roundtrip_scales_with_batch():
+    t_small = layer_comm_time(4, 8, 64, 4096, H100)
+    t_big = layer_comm_time(4, 8, 4096, 4096, H100)
+    assert t_big > t_small
+
+
+def test_egate_vs_agate_regimes():
+    """§5.3 / Fig. 12: with two-phase aggregation, MoE-side gating (full
+    activations, no metadata) competes with attention-side gating even though
+    it ships more bytes, because it avoids the per-destination messages."""
+    c = _cfg(8, 16, B=128, d=5120)
+    t_2pc_egate, _ = adaptive_two_phase(c)
+    t_agate = agate_cost(c, top_k=8, num_experts=160)
+    assert t_2pc_egate < t_agate * 2.5  # same order; aggregation pays for bytes
+
+
+def test_tpu_constants_sane():
+    assert TPU_V5E.peak_flops == 197e12
+    assert TPU_V5E.hbm_bw == 819e9
+    assert H100.fast_bw > H100.slow_bw

@@ -1,0 +1,59 @@
+"""int8 KV cache (§Perf P3, beyond-paper): numerics + spec plumbing."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, get_config, input_specs
+from repro.models import model as M
+from repro.models.attention import dequantize_kv, quantize_kv
+
+
+def test_quantize_roundtrip():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 64, 8, 128), jnp.float32) * 3
+    q, s = quantize_kv(x)
+    assert q.dtype == jnp.int8 and s.shape == (4, 64, 8)
+    back = dequantize_kv(q, s, jnp.float32)
+    err = np.abs(np.asarray(back - x)).max() / np.abs(np.asarray(x)).max()
+    assert err < 0.01  # absmax int8: ≤ 1/254 relative
+
+
+@pytest.mark.parametrize("base", ["gemma2-2b", "qwen2-moe-a2.7b", "zamba2-2.7b", "whisper-tiny"])
+def test_int8_kv_decode_close_to_fullprec(base):
+    cfg = dataclasses.replace(get_config(base + "-reduced"), kv_quant=True)
+    params = M.init_params(cfg, 0)
+    B, S = 2, 24
+    key = jax.random.PRNGKey(1)
+    tokens = jax.random.randint(key, (B, S + 1), 0, cfg.vocab_size)
+    extra = {"moe_ctx": {"capacity": 512}} if cfg.has_moe else {}
+    if cfg.frontend == "audio_frames":
+        extra["encoder_frames"] = (
+            jax.random.normal(key, (B, cfg.encoder_seq, cfg.d_model), jnp.float32) * 0.1
+        ).astype(jnp.bfloat16)
+    extra = extra or None
+    lf, _ = M.logits_fn(params, tokens, cfg, extra=extra)
+    _, caches = M.prefill(params, tokens[:, :S], cfg, cache_len=S + 8, extra=extra)
+    kv_keys = [k for k in caches if k.startswith("kv_") and not k.endswith("_scale")]
+    assert kv_keys and all(caches[k].dtype == jnp.int8 for k in kv_keys)
+    got, _ = M.decode_step(params, tokens[:, S:], caches, jnp.int32(S), cfg, extra=extra)
+    want = np.asarray(lf[:, S], np.float32)
+    err = np.abs(want - np.asarray(got, np.float32)).max() / (np.abs(want).max() + 1e-9)
+    assert err < 0.05, err
+
+
+def test_int8_specs_and_sharding():
+    from types import SimpleNamespace
+
+    from repro.sharding.rules import input_pspecs
+
+    cfg = dataclasses.replace(get_config("phi3.5-moe-42b-a6.6b"), kv_quant=True)
+    shape = SHAPES["decode_32k"]
+    specs = input_specs(cfg, shape)
+    assert specs["kv_k"].dtype == jnp.int8
+    assert specs["kv_k_scale"].shape == specs["kv_k"].shape[:-1]
+    mesh = SimpleNamespace(shape={"data": 16, "model": 16})
+    psp = input_pspecs(cfg, shape, specs, mesh)
+    assert len(tuple(psp["kv_k_scale"])) == 4

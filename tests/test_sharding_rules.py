@@ -1,0 +1,77 @@
+"""Sharding-rule validity: every PartitionSpec divides its dimension, for
+every architecture × mesh, without touching device state (abstract only)."""
+
+from types import SimpleNamespace
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ASSIGNED, REGISTRY, SHAPES, input_specs, shape_supported
+from repro.launch.steps import abstract_params, serving_layout
+from repro.sharding.rules import input_pspecs, param_pspecs
+
+MESHES = {
+    "16x16": SimpleNamespace(shape={"data": 16, "model": 16}),
+    "2x16x16": SimpleNamespace(shape={"pod": 2, "data": 16, "model": 16}),
+}
+
+
+def _axis_size(mesh, entry):
+    if entry is None:
+        return 1
+    if isinstance(entry, (tuple, list)):
+        n = 1
+        for a in entry:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[entry]
+
+
+def _check_spec(shape, spec, mesh, what):
+    entries = tuple(spec)
+    assert len(entries) <= len(shape), (what, shape, spec)
+    for dim, entry in zip(shape, entries):
+        k = _axis_size(mesh, entry)
+        assert dim % k == 0, f"{what}: dim {dim} not divisible by {k} ({spec})"
+
+
+@pytest.mark.parametrize("mesh_name", list(MESHES))
+@pytest.mark.parametrize("arch", sorted(ASSIGNED))
+def test_param_pspecs_divisible(arch, mesh_name):
+    cfg = REGISTRY[arch]
+    mesh = MESHES[mesh_name]
+    params = abstract_params(cfg)
+    for fsdp in (False, True):
+        specs = param_pspecs(cfg, params, mesh, fsdp=fsdp)
+        flat_p = jax.tree.leaves(params)
+        flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+        assert len(flat_p) == len(flat_s)
+        for leaf, spec in zip(flat_p, flat_s):
+            _check_spec(leaf.shape, spec, mesh, f"{arch} fsdp={fsdp}")
+
+
+@pytest.mark.parametrize("mesh_name", list(MESHES))
+@pytest.mark.parametrize("arch", sorted(ASSIGNED))
+@pytest.mark.parametrize("shape_name", sorted(SHAPES))
+def test_input_pspecs_divisible(arch, shape_name, mesh_name):
+    cfg, shape = REGISTRY[arch], SHAPES[shape_name]
+    if not shape_supported(cfg, shape)[0]:
+        pytest.skip("unsupported combo")
+    mesh = MESHES[mesh_name]
+    specs = input_specs(cfg, shape)
+    pspecs = input_pspecs(cfg, shape, specs, mesh)
+    for name, s in specs.items():
+        _check_spec(s.shape, pspecs[name], mesh, f"{arch}/{shape_name}/{name}")
+
+
+@pytest.mark.parametrize("arch", ["qwen2-moe-a2.7b", "phi3.5-moe-42b-a6.6b"])
+def test_serving_layout_slots_divisible(arch):
+    cfg = REGISTRY[arch]
+    for n in (16, 256):
+        layout = serving_layout(cfg, n)
+        assert layout.total_slots % n == 0
+        assert layout.total_slots >= cfg.num_experts
+        assert (layout.replica_counts >= 1).all()
+        # headroom: at least one expert replicated
+        assert layout.total_slots > cfg.num_experts
