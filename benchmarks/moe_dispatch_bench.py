@@ -1,0 +1,211 @@
+"""MoE dispatch-path shootout: einsum vs scatter vs grouped (sort-based).
+
+Times one scheduled MoE dispatch+FFN call — the serving hot path — for each
+implementation across (T, E, S) sweeps on a replicated AEBS layout, and
+writes ``BENCH_moe_dispatch.json`` at the repo root so the perf trajectory
+is tracked from PR to PR.
+
+Paths measured (identical outputs, equivalence-tested in
+tests/test_moe_dispatch.py):
+
+* ``einsum``   — one-hot oracle over replica slots + per-slot weight copy
+* ``scatter``  — scatter/one-hot dispatch over slots + per-slot weight copy
+  (``gather_slot_weights``: 3 × [S, d, f] materialised every call)
+* ``grouped``  — production path: sort-based dispatch, AEBS single-replica
+  collapse → one batched GEMM over the logical [E, d, f] weights, zero
+  weight copies
+* ``grouped_indirect`` — grouped dispatch kept on slot buckets with the
+  flat slot→expert map (the non-collapsible-scheduler route: stream loop
+  over activated slots)
+* ``grouped_kernel``   — same, through the Pallas kernel (interpret mode on
+  CPU, so timed only on the smallest sweep; compiled on TPU)
+
+Peak-memory figures are analytic estimates of the path-specific transient
+buffers (weight copies + dispatch masks/buffers), not device telemetry.
+
+Run:  PYTHONPATH=src python -m benchmarks.moe_dispatch_bench
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, timeit
+from repro.core.aebs import ReplicaLayout, aebs_assign
+from repro.core.amax import make_routing_trace
+from repro.models import moe as moe_mod
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_PATH = os.path.join(REPO_ROOT, "BENCH_moe_dispatch.json")
+
+# (T, k, E, n_instances, slots_per_instance, d, f)
+SWEEPS = [
+    (256, 2, 16, 4, 8, 64, 128),
+    (512, 2, 32, 8, 6, 128, 256),
+    (1024, 4, 64, 8, 12, 128, 256),
+]
+
+_F32 = 4
+
+
+def _mem_estimates(T: int, k: int, E: int, S: int, cap: int, d: int, f: int) -> Dict[str, int]:
+    """Analytic per-call transient bytes for each path (f32)."""
+    I = T * k
+    w_copy = 3 * S * d * f * _F32  # gather_slot_weights materialisation
+    return {
+        "einsum": w_copy + I * S * cap * _F32 + S * cap * d * _F32,
+        "scatter": w_copy + 2 * I * S * _F32 + S * (cap + 1) * d * _F32,
+        "grouped": 6 * I * _F32 + E * cap * d * _F32,
+        "grouped_indirect": 6 * I * _F32 + S * cap * d * _F32 + 3 * 8 * d * f * _F32,
+        "grouped_kernel": 6 * I * _F32 + S * cap * d * _F32 + 3 * d * f * _F32,
+    }
+
+
+def _build_case(T, k, E, n_inst, C, d, f, seed=0):
+    layout = ReplicaLayout.round_robin(E, n_inst, C)
+    s2e = jnp.asarray(layout.slot_to_expert.reshape(-1))
+    S = int(s2e.shape[0])
+    cap = moe_mod.default_capacity(T, k, S, 1.5)
+    trace = make_routing_trace(max(T, 2048), E, k, skew=0.8, seed=seed)
+    eids = jnp.asarray(trace[:T])
+    slot_ids, load, _ = aebs_assign(eids, layout.device_tables(), n_inst)
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    x = jax.random.normal(ks[0], (T, d), jnp.float32)
+    gates = jax.nn.softmax(jax.random.normal(ks[1], (T, k), jnp.float32))
+    params = {
+        "w_gate": jax.random.normal(ks[2], (E, d, f), jnp.float32) * 0.05,
+        "w_up": jax.random.normal(ks[3], (E, d, f), jnp.float32) * 0.05,
+        "w_down": jax.random.normal(ks[4], (E, f, d), jnp.float32) * 0.05,
+    }
+    return layout, s2e, S, cap, x, eids, slot_ids, gates, params, int(jnp.max(load))
+
+
+def _paths(S, cap, E, s2e, with_kernel: bool):
+    """jit-able callables (params, x, slot_ids, expert_ids, gates) → [T, d]."""
+
+    def einsum_path(p, x, slot_ids, eids_c, gates):
+        w = moe_mod.gather_slot_weights(p, s2e)
+        return moe_mod.capacity_dispatch_ffn(x, slot_ids, gates, S, cap, w)
+
+    def scatter_path(p, x, slot_ids, eids_c, gates):
+        w = moe_mod.gather_slot_weights(p, s2e)
+        return moe_mod.scatter_dispatch_ffn(x, slot_ids, gates, S, cap, w)
+
+    def grouped_path(p, x, slot_ids, eids_c, gates):
+        # AEBS activates one replica per expert → slots collapse to experts
+        # (exactly what moe_layer(dispatch="grouped") does for AEBS)
+        return moe_mod.grouped_dispatch_ffn(x, eids_c, gates, E, cap, p)
+
+    def grouped_indirect_path(p, x, slot_ids, eids_c, gates):
+        return moe_mod.grouped_dispatch_ffn(
+            x, slot_ids, gates, S, cap, p, slot_to_expert=s2e, backend="stream"
+        )
+
+    out = {
+        "einsum": einsum_path,
+        "scatter": scatter_path,
+        "grouped": grouped_path,
+        "grouped_indirect": grouped_indirect_path,
+    }
+    if with_kernel:
+        out["grouped_kernel"] = lambda p, x, slot_ids, eids_c, gates: (
+            moe_mod.grouped_dispatch_ffn(
+                x, slot_ids, gates, S, cap, p, slot_to_expert=s2e, backend="kernel"
+            )
+        )
+    return out
+
+
+def run_sweeps(repeat: int = 5) -> Dict:
+    on_tpu = jax.default_backend() == "tpu"
+    results = []
+    for i, (T, k, E, n_inst, C, d, f) in enumerate(SWEEPS):
+        layout, s2e, S, cap, x, eids, slot_ids, gates, params, a_max = _build_case(
+            T, k, E, n_inst, C, d, f, seed=i
+        )
+        # the collapsed bucket ids the production grouped path dispatches on
+        eids_c = jnp.maximum(s2e, 0)[slot_ids]
+        # interpret-mode kernels are emulation: time them only where cheap
+        with_kernel = on_tpu or (T <= 256)
+        mems = _mem_estimates(T, k, E, S, cap, d, f)
+        entry = {
+            "T": T, "k": k, "E": E, "S": S, "capacity": cap, "d": d, "f": f,
+            "n_instances": n_inst, "a_max": a_max, "paths": {},
+        }
+        ref = None
+        for name, fn in _paths(S, cap, E, s2e, with_kernel).items():
+            jfn = jax.jit(fn)
+            call = lambda: jax.block_until_ready(jfn(params, x, slot_ids, eids_c, gates))
+            us = timeit(call, repeat=repeat, warmup=2)
+            y = np.asarray(jfn(params, x, slot_ids, eids_c, gates))
+            if ref is None:
+                ref = y
+            else:
+                np.testing.assert_allclose(y, ref, atol=1e-4, rtol=1e-3)
+            entry["paths"][name] = {
+                "wall_ms": round(us / 1e3, 4),
+                "peak_mem_est_mb": round(mems[name] / 2**20, 3),
+            }
+        sc, gr = entry["paths"]["scatter"], entry["paths"]["grouped"]
+        entry["speedup_grouped_vs_scatter"] = round(sc["wall_ms"] / gr["wall_ms"], 3)
+        results.append(entry)
+    return {
+        "bench": "moe_dispatch",
+        "backend": jax.default_backend(),
+        "kernel_mode": "compiled" if on_tpu else "interpret",
+        "notes": "scheduled serving shapes; AEBS routing on a replicated "
+                 "round-robin layout; skewed (0.8) routing trace; memory "
+                 "figures are analytic per-call transient estimates",
+        "sweeps": results,
+    }
+
+
+def run() -> List[Row]:
+    """Harness entry point (benchmarks.run)."""
+    report = run_sweeps(repeat=3)
+    with open(OUT_PATH, "w") as fh:
+        json.dump(report, fh, indent=2)
+    rows: List[Row] = []
+    for e in report["sweeps"]:
+        for name, r in e["paths"].items():
+            rows.append(
+                (
+                    f"moe_dispatch/T{e['T']}_E{e['E']}_S{e['S']}/{name}",
+                    r["wall_ms"] * 1e3,
+                    f"mem={r['peak_mem_est_mb']}MB",
+                )
+            )
+        rows.append(
+            (
+                f"moe_dispatch/T{e['T']}_E{e['E']}_S{e['S']}/speedup",
+                0.0,
+                f"grouped_vs_scatter={e['speedup_grouped_vs_scatter']}x",
+            )
+        )
+    return rows
+
+
+def main() -> None:
+    report = run_sweeps()
+    with open(OUT_PATH, "w") as fh:
+        json.dump(report, fh, indent=2)
+    print(f"wrote {OUT_PATH}")
+    for e in report["sweeps"]:
+        line = " ".join(
+            f"{n}={r['wall_ms']:.2f}ms" for n, r in e["paths"].items()
+        )
+        print(
+            f"T={e['T']} E={e['E']} S={e['S']} cap={e['capacity']} "
+            f"a_max={e['a_max']}: {line} | grouped vs scatter "
+            f"{e['speedup_grouped_vs_scatter']}x"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -28,6 +28,7 @@ MODULES = [
     "fig17_bound",
     "sec6_pipelining",
     "engine_schedulers",
+    "moe_dispatch_bench",
     "roofline_report",
 ]
 

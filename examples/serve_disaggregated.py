@@ -35,6 +35,7 @@ from repro.core.comm import H100, CommConfig, adaptive_two_phase, one_phase_cost
 from repro.core.disagg import DevicePools
 from repro.models import model as model_mod
 from repro.models import moe as moe_mod
+from repro.launch.mesh import use_mesh
 from repro.models.moe_ep import moe_layer_ep
 
 
@@ -124,7 +125,7 @@ def spmd_mode_demo():
     )
     B, S = 4, 32
     tokens = jax.random.randint(jax.random.PRNGKey(3), (B, S), 0, cfg.vocab_size)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         _, caches = model_mod.prefill(params, tokens, cfg, cache_len=S + 16)
         step = jax.jit(
             lambda p, t, c, i: model_mod.decode_step(p, t, c, i, cfg, extra={"moe_ctx": moe_ctx})

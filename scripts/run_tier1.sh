@@ -1,0 +1,11 @@
+#!/usr/bin/env bash
+# Tier-1 verify: the line the ROADMAP pins and CI runs.
+#
+#   scripts/run_tier1.sh [extra pytest args...]
+#
+# Property tests require `hypothesis` (see requirements-dev.txt); without it
+# they skip cleanly and the rest of the suite still runs.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q "$@"

@@ -170,6 +170,12 @@ def aebs_assign(
     return slot_ids, load2, rep2
 
 
+# AEBS activates exactly one physical replica per activated logical expert —
+# the property that lets the grouped dispatch collapse replica slots back to
+# logical experts (see repro.models.moe.scheduler_is_single_replica).
+aebs_assign.single_active_replica = True
+
+
 def amax_of(load: jax.Array) -> jax.Array:
     return jnp.max(load)
 

@@ -59,6 +59,10 @@ def random_assign(
     return slot_ids, load, act_rep
 
 
+# one replica per activated expert (chosen at random) → collapse-eligible
+random_assign.single_active_replica = True
+
+
 def token_hash_assign(
     eids: jax.Array,
     tables: Dict[str, jax.Array],

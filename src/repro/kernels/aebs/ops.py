@@ -35,3 +35,7 @@ def aebs_schedule(
         block_tokens=block_tokens,
         interpret=not _on_tpu(),
     )
+
+
+# same Algorithm-1 semantics as aebs_assign: one replica per activated expert
+aebs_schedule.single_active_replica = True

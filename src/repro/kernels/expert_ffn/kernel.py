@@ -6,42 +6,54 @@ expert's weights must be streamed from HBM regardless of its token count.
 This kernel makes that structure explicit on TPU:
 
   grid = (num_slots, d_ff_tiles)
-  * inactive expert slots are skipped entirely via ``@pl.when`` — no weight
-    streaming, no FLOPs: per-instance time ∝ activated-slot count, exactly
-    the β·a_max model of Eq. 1c;
+  * weights are read *slot-indirectly*: the flat ``slot_to_expert`` map is a
+    scalar-prefetch operand and the weight BlockSpec index_maps dereference it,
+    so the kernel streams gate/up/down blocks straight out of the logical
+    ``[E, d, f]`` arrays — replica slots never materialise a weight copy;
+  * inactive expert slots skip all compute via ``@pl.when`` (their weight
+    index_maps degenerate to expert 0's blocks, which the pipeline elides
+    for consecutive inactive steps), so per-instance FLOPs ∝ activated-slot
+    count — the β·a_max model of Eq. 1c.  Hosts where a compiled kernel is
+    unavailable get the same activated-only behaviour from the stream-loop
+    fallback (``repro.models.moe.stream_slot_ffn``), which iterates over
+    active slots exclusively;
   * active slots run a double GEMM (gate/up) + SwiGLU + down-projection over
     their capacity-packed token block, tiled along d_ff so every working set
     fits VMEM with MXU-aligned (multiples of 128) matmul dims;
   * the down-projection accumulates across d_ff tiles into the output block
     (the d_ff grid axis iterates innermost → sequential on TPU).
+
+When ``slot_to_expert`` is the identity the kernel degenerates to the old
+stacked-weights form (weights [S, d, f], one slab per slot), which is how the
+pinned-replica deployment path (launch.steps.materialize_slot_params) and the
+pre-existing tests drive it.
 """
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _expert_ffn_kernel(
-    active_ref,  # [1, 1] int32 — is this slot activated?
+    s2e_ref,  # [S] int32 scalar-prefetch — slot → logical expert
+    active_ref,  # [S] int32 scalar-prefetch — slot activation bitmap
     x_ref,  # [1, CAP, d]
-    wg_ref,  # [1, d, FT]
+    wg_ref,  # [1, d, FT]  (block of w_gate[s2e[s]])
     wu_ref,  # [1, d, FT]
     wd_ref,  # [1, FT, d]
     out_ref,  # [1, CAP, d]
-    *,
-    num_ff_tiles: int,
 ):
+    s = pl.program_id(0)
     j = pl.program_id(1)
 
     @pl.when(j == 0)
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    @pl.when(active_ref[0, 0] > 0)
+    @pl.when(active_ref[s] > 0)
     def _compute():
         x = x_ref[0]  # [CAP, d]
         g = jnp.dot(x, wg_ref[0], preferred_element_type=jnp.float32)
@@ -53,34 +65,55 @@ def _expert_ffn_kernel(
 
 def expert_ffn_pallas(
     x: jax.Array,  # [S, CAP, d] capacity-packed tokens per slot
-    w_gate: jax.Array,  # [S, d, f]
-    w_up: jax.Array,  # [S, d, f]
-    w_down: jax.Array,  # [S, f, d]
+    w_gate: jax.Array,  # [E, d, f] logical (or [S, d, f] stacked w/ identity map)
+    w_up: jax.Array,  # [E, d, f]
+    w_down: jax.Array,  # [E, f, d]
     active: jax.Array,  # [S] int32/bool — slot activation bitmap
+    slot_to_expert: jax.Array | None = None,  # [S] int32, -1 → skip; None = identity
     *,
     ff_tile: int = 512,
     interpret: bool = True,
 ) -> jax.Array:
-    """SwiGLU expert FFN per slot; inactive slots yield zeros."""
+    """SwiGLU expert FFN per slot with slot-indirect weight reads.
+
+    Inactive slots (``active == 0`` or ``slot_to_expert == -1``) yield zeros
+    and stream no weights.
+    """
     S, CAP, d = x.shape
     f = w_gate.shape[-1]
     FT = min(ff_tile, f)
     if f % FT:
         raise ValueError(f"d_ff={f} not divisible by ff_tile={FT}")
     nft = f // FT
-    active = active.astype(jnp.int32).reshape(S, 1)
+    if slot_to_expert is None:
+        if w_gate.shape[0] != S:
+            raise ValueError(
+                f"identity slot map needs stacked weights: {w_gate.shape[0]} != {S}"
+            )
+        slot_to_expert = jnp.arange(S, dtype=jnp.int32)
+    slot_to_expert = slot_to_expert.astype(jnp.int32)
+    active = (active.astype(jnp.int32) * (slot_to_expert >= 0)).astype(jnp.int32)
 
-    return pl.pallas_call(
-        functools.partial(_expert_ffn_kernel, num_ff_tiles=nft),
+    def _wslab(s, j, s2e, act):
+        return (jnp.maximum(s2e[s], 0), 0, j)
+
+    def _wslab_t(s, j, s2e, act):
+        return (jnp.maximum(s2e[s], 0), j, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
         grid=(S, nft),
         in_specs=[
-            pl.BlockSpec((1, 1), lambda s, j: (s, 0)),
-            pl.BlockSpec((1, CAP, d), lambda s, j: (s, 0, 0)),
-            pl.BlockSpec((1, d, FT), lambda s, j: (s, 0, j)),
-            pl.BlockSpec((1, d, FT), lambda s, j: (s, 0, j)),
-            pl.BlockSpec((1, FT, d), lambda s, j: (s, j, 0)),
+            pl.BlockSpec((1, CAP, d), lambda s, j, s2e, act: (s, 0, 0)),
+            pl.BlockSpec((1, d, FT), _wslab),
+            pl.BlockSpec((1, d, FT), _wslab),
+            pl.BlockSpec((1, FT, d), _wslab_t),
         ],
-        out_specs=pl.BlockSpec((1, CAP, d), lambda s, j: (s, 0, 0)),
+        out_specs=pl.BlockSpec((1, CAP, d), lambda s, j, s2e, act: (s, 0, 0)),
+    )
+    return pl.pallas_call(
+        _expert_ffn_kernel,
+        grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((S, CAP, d), x.dtype),
         interpret=interpret,
-    )(active, x, w_gate, w_up, w_down)
+    )(slot_to_expert, active, x, w_gate, w_up, w_down)

@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for the grouped expert-FFN kernel."""
+"""Pure-jnp oracles for the grouped expert-FFN kernel."""
 
 from __future__ import annotations
 
@@ -19,3 +19,18 @@ def expert_ffn_ref(
     y = jnp.einsum("scf,sfd->scd", h, w_down, preferred_element_type=jnp.float32)
     mask = (active.astype(jnp.int32) > 0)[:, None, None]
     return jnp.where(mask, y, 0.0).astype(x.dtype)
+
+
+def expert_ffn_grouped_ref(
+    x: jax.Array,  # [S, CAP, d]
+    w_gate: jax.Array,  # [E, d, f] logical
+    w_up: jax.Array,
+    w_down: jax.Array,  # [E, f, d]
+    slot_to_expert: jax.Array,  # [S] int32, -1 → inactive
+    active: jax.Array,  # [S]
+) -> jax.Array:
+    """Oracle for the slot-indirect kernel (the oracle may gather; the kernel
+    must not)."""
+    idx = jnp.maximum(slot_to_expert, 0)
+    act = active.astype(jnp.int32) * (slot_to_expert >= 0)
+    return expert_ffn_ref(x, w_gate[idx], w_up[idx], w_down[idx], act)

@@ -26,7 +26,7 @@ import time  # noqa: E402
 import jax  # noqa: E402
 
 from repro.configs import REGISTRY, SHAPES, get_config, shape_supported  # noqa: E402
-from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.mesh import make_production_mesh, use_mesh  # noqa: E402
 from repro.launch.steps import BUILDERS  # noqa: E402
 from repro.roofline import analysis  # noqa: E402
 
@@ -47,7 +47,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str) -> dict:
     mesh_name = "x".join(str(s) for s in mesh.devices.shape)
     chips = mesh.devices.size
     t0 = time.perf_counter()
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         step, abs_args = BUILDERS[shape.kind](cfg, mesh, shape)
         lowered = step.lower(*abs_args)
         t_lower = time.perf_counter() - t0

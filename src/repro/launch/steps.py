@@ -116,6 +116,9 @@ def make_moe_ctx(
         ),
     )
     if mode == "scheduled":
+        # serving hot path: sort-based grouped dispatch — no per-step weight
+        # copies, inactive replica slots stream no weights (β·a_max cost)
+        ctx["ep_ctx"]["dispatch"] = "grouped"
         layout = serving_layout(cfg, n_model)
         ctx.update(
             scheduler=scheduler,

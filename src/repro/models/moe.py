@@ -1,13 +1,31 @@
 """Mixture-of-Experts layer: routing, dispatch, shared experts, AEBS hook.
 
-Two dispatch implementations with identical semantics (tested for
+Three dispatch implementations with identical semantics (tested for
 equivalence):
 
-* :func:`capacity_dispatch_ffn` — einsum/one-hot based.  O(T·S·cap) mask
-  memory; the readable oracle, used at small scale and as the kernels' ref.
+* :func:`capacity_dispatch_ffn` — einsum/one-hot based.  O(T·k·S·cap) mask
+  memory; the readable oracle, used at small scale and as the other paths'
+  equivalence reference.  Chosen with ``dispatch="einsum"`` (the default for
+  ad-hoc calls without a serving layout).
 * :func:`scatter_dispatch_ffn` — scatter/gather based.  O(S·cap·d) buffer
-  memory; the production path, also the per-shard body of the
-  expert-parallel (shard_map) MoE in ``repro.launch.steps``.
+  memory but still O(T·k·S) one-hot/cumsum position work, and on the
+  scheduled path it needs per-slot weights (a ``[S_total, d, f]`` replica
+  materialisation via :func:`gather_slot_weights`).  Kept as the per-shard
+  body of the legacy expert-parallel path and as the benchmark baseline.
+  Chosen with ``dispatch="scatter"``.
+* :func:`grouped_dispatch_ffn` — sort-based grouped dispatch, the production
+  serving path (``dispatch="grouped"``; :class:`repro.serving.engine
+  .ServingEngine` selects it whenever a replica layout is present).  Tokens
+  are packed into capacity blocks by a stable argsort over bucket ids plus
+  segment offsets (O(T·k·log) work, no one-hot masks, no ``jnp.repeat``), and
+  expert weights are *never* copied per slot: single-active-replica
+  schedulers (AEBS, random — at most one physical replica per activated
+  expert) collapse replica slots back to logical experts and run one batched
+  GEMM over the ``[E, d, f]`` arrays, while per-item schedulers keep slot
+  buckets and read weights slot-indirectly — via the scalar-prefetch Pallas
+  kernel on TPU (``repro.kernels.expert_ffn``) or a stream loop over
+  *activated* slots elsewhere.  Per-step cost therefore tracks the number of
+  distinct activated experts (β·a_max, Eq. 1c) instead of the slot count.
 
 Scheduling hook: when a :class:`repro.core.aebs.ReplicaLayout` is provided,
 token routing is rewritten from logical expert ids to *physical replica
@@ -88,9 +106,52 @@ def gather_slot_weights(params: Params, slot_to_expert: jax.Array) -> Params:
     """Materialise per-slot expert weights (replication) from logical weights.
 
     slot_to_expert: flat [S_total] int32 (-1 → expert 0; such slots receive no
-    tokens by construction)."""
+    tokens by construction).
+
+    This is the O(S_total·d·f) copy the grouped path exists to avoid: it is
+    only used by the einsum/scatter paths and by one-time deployment pinning
+    (``launch.steps.materialize_slot_params``)."""
     idx = jnp.maximum(slot_to_expert, 0)
     return {k: params[k][idx] for k in ("w_gate", "w_up", "w_down")}
+
+
+def stream_slot_ffn(
+    xin: jax.Array,  # [S, cap, d] capacity-packed tokens
+    weights: Params,  # logical [E, d, f] (or stacked [S, d, f] w/ identity map)
+    slot_to_expert: jax.Array,  # [S] int32, -1 → inactive
+    active: jax.Array,  # [S] bool
+    block: int = 8,
+) -> jax.Array:
+    """Expert FFN over *activated* slots only, streaming weight blocks.
+
+    The host-side analogue of the Pallas kernel's ``@pl.when`` skip: slots are
+    compacted so the loop trip count is ``ceil(n_active / block)`` — run time
+    tracks the activated-expert count (β·a_max), and at most ``block`` experts'
+    weights are resident at once (no ``[S, d, f]`` materialisation).
+    """
+    S, cap, d = xin.shape
+    g = min(block, S)
+    nblk = (S + g - 1) // g
+    perm = jnp.argsort(~active)  # active slot ids first (stable)
+    perm = jnp.pad(perm, (0, nblk * g - S))
+    n_act = jnp.sum(active.astype(jnp.int32))
+    n_blk = (n_act + g - 1) // g
+
+    def body(i, out):
+        sl = jax.lax.dynamic_slice_in_dim(perm, i * g, g)  # [g] slot ids
+        es = jnp.maximum(slot_to_expert[sl], 0)
+        wg = weights["w_gate"][es]  # [g, d, f] transient working set
+        wu = weights["w_up"][es]
+        wd = weights["w_down"][es]
+        xb = xin[sl]  # [g, cap, d]
+        h = jax.nn.silu(jnp.einsum("gcd,gdf->gcf", xb, wg)) * jnp.einsum(
+            "gcd,gdf->gcf", xb, wu
+        )
+        y = jnp.einsum("gcf,gfd->gcd", h, wd)
+        m = jnp.arange(g) + i * g < n_act  # tail block may be part-active
+        return out.at[sl].add(jnp.where(m[:, None, None], y, 0).astype(out.dtype))
+
+    return jax.lax.fori_loop(0, n_blk, body, jnp.zeros_like(xin))
 
 
 # ---------------------------------------------------------------------------
@@ -99,12 +160,52 @@ def gather_slot_weights(params: Params, slot_to_expert: jax.Array) -> Params:
 
 
 def _positions_in_bucket(flat_ids: jax.Array, num_buckets: int, item_mask: Optional[jax.Array]) -> jax.Array:
-    """Arrival order of each item within its bucket. flat_ids [I] → pos [I]."""
+    """Arrival order of each item within its bucket. flat_ids [I] → pos [I].
+
+    One-hot/cumsum based — O(I·num_buckets); used by the oracle paths only."""
     oh = jax.nn.one_hot(flat_ids, num_buckets, dtype=jnp.int32)
     if item_mask is not None:
         oh = oh * item_mask[:, None].astype(jnp.int32)
     pos = jnp.sum(jnp.cumsum(oh, axis=0) * oh, axis=-1) - 1
     return pos
+
+
+def sort_dispatch_plan(
+    flat_ids: jax.Array,  # [I] bucket id per item (may contain -1 / invalid)
+    num_buckets: int,
+    capacity: int,
+    item_mask: Optional[jax.Array] = None,  # [I] bool
+) -> Dict[str, jax.Array]:
+    """Sort-based token permutation: the O(I·log I) replacement for the
+    one-hot/cumsum position computation.
+
+    A stable argsort over bucket ids groups items by bucket in arrival order
+    (so capacity overflow drops exactly the same items as the one-hot paths);
+    segment offsets then come from a binary search instead of a cumsum.
+
+    Returns a dict with:
+      ``pos``    [I]        arrival position of each item within its bucket
+      ``keep``   [I] bool   item survives masking + capacity
+      ``counts`` [B] int32  items per bucket (pre-capacity)
+      ``src``    [B, cap]   item index feeding each capacity row
+      ``row_valid`` [B, cap] bool — capacity row is backed by a real item
+    """
+    I = flat_ids.shape[0]
+    valid = (flat_ids >= 0) & (flat_ids < num_buckets)
+    if item_mask is not None:
+        valid = valid & item_mask
+    ids = jnp.where(valid, flat_ids, num_buckets)  # invalid → sentinel bucket
+    order = jnp.argsort(ids, stable=True).astype(jnp.int32)  # [I]
+    sorted_ids = ids[order]
+    offsets = jnp.searchsorted(sorted_ids, jnp.arange(num_buckets + 1)).astype(jnp.int32)
+    counts = offsets[1:] - offsets[:-1]  # [B]
+    pos_sorted = jnp.arange(I, dtype=jnp.int32) - offsets[jnp.clip(sorted_ids, 0, num_buckets)]
+    pos = jnp.zeros((I,), jnp.int32).at[order].set(pos_sorted)
+    keep = valid & (pos < capacity)
+    rows = offsets[:-1, None] + jnp.arange(capacity, dtype=jnp.int32)[None, :]  # [B, cap]
+    row_valid = jnp.arange(capacity)[None, :] < counts[:, None]
+    src = order[jnp.clip(rows, 0, I - 1)]
+    return {"pos": pos, "keep": keep, "counts": counts, "src": src, "row_valid": row_valid}
 
 
 def capacity_dispatch_ffn(
@@ -147,7 +248,7 @@ def scatter_dispatch_ffn(
     weights: Params,
     item_mask: Optional[jax.Array] = None,
 ) -> jax.Array:
-    """Scatter/gather dispatch (production path, same semantics)."""
+    """Scatter/gather dispatch (legacy production path, same semantics)."""
     T, k = bucket_ids.shape
     d = x2d.shape[-1]
     dt = x2d.dtype
@@ -167,9 +268,103 @@ def scatter_dispatch_ffn(
     return (y_items * gflat[:, None]).reshape(T, k, -1).sum(axis=1)
 
 
+def grouped_dispatch_ffn(
+    x2d: jax.Array,  # [T, d]
+    bucket_ids: jax.Array,  # [T, k]
+    gates: jax.Array,  # [T, k]
+    num_buckets: int,
+    capacity: int,
+    weights: Params,  # stacked [B, ...] (map None) or logical [E, ...] (map given)
+    slot_to_expert: Optional[jax.Array] = None,  # [B] int32 bucket → expert, -1 empty
+    item_mask: Optional[jax.Array] = None,  # [T*k] bool
+    backend: str = "auto",  # auto | einsum | stream | kernel
+) -> jax.Array:
+    """Sort-based grouped dispatch — the production hot path.
+
+    Token permutation is a stable argsort (no one-hot masks, no
+    ``jnp.repeat``); the capacity buffer is built by gather from segment
+    offsets.  The expert FFN runs:
+
+    * ``einsum``  — one batched GEMM over the bucket-stacked weights (used
+      when buckets *are* logical experts, i.e. ``slot_to_expert is None``);
+    * ``kernel``  — the Pallas grouped kernel: ``slot_to_expert`` is a
+      scalar-prefetch operand and weights stream straight from the logical
+      ``[E, d, f]`` arrays (TPU; interpret elsewhere — tests only);
+    * ``stream``  — :func:`stream_slot_ffn`, a loop over *activated* slots
+      with block weight streaming (CPU/GPU production fallback);
+    * ``auto``    — einsum if buckets are experts, else kernel on TPU and
+      stream elsewhere.
+
+    Inactive buckets (no tokens, or ``slot_to_expert == -1``) contribute
+    exact zeros and — on kernel/stream backends — stream no weights.
+    """
+    T, k = bucket_ids.shape
+    dt = x2d.dtype
+    flat = bucket_ids.reshape(-1)
+    plan = sort_dispatch_plan(flat, num_buckets, capacity, item_mask)
+    xin = jnp.where(plan["row_valid"][..., None], x2d[plan["src"] // k], 0).astype(dt)
+
+    if backend == "auto":
+        if slot_to_expert is None:
+            backend = "einsum"
+        else:
+            backend = "kernel" if jax.default_backend() == "tpu" else "stream"
+
+    active = plan["counts"] > 0
+    if slot_to_expert is not None:
+        active = active & (slot_to_expert >= 0)
+
+    if backend == "einsum":
+        if slot_to_expert is not None:
+            raise ValueError("einsum backend needs bucket-stacked weights (no slot map)")
+        out = jnp.where(active[:, None, None], expert_ffn(weights, xin), 0).astype(dt)
+    elif backend == "stream":
+        s2e = (
+            slot_to_expert
+            if slot_to_expert is not None
+            else jnp.arange(num_buckets, dtype=jnp.int32)
+        )
+        out = stream_slot_ffn(xin, weights, s2e, active)
+    elif backend == "kernel":
+        from repro.kernels.expert_ffn.ops import expert_ffn_grouped
+
+        s2e = (
+            slot_to_expert
+            if slot_to_expert is not None
+            else jnp.arange(num_buckets, dtype=jnp.int32)
+        )
+        out = expert_ffn_grouped(
+            xin, weights["w_gate"], weights["w_up"], weights["w_down"], s2e, active
+        )
+    else:
+        raise ValueError(f"unknown grouped backend: {backend}")
+
+    keep = plan["keep"]
+    pos = plan["pos"]
+    y_items = out[jnp.where(keep, flat, 0), jnp.minimum(pos, capacity - 1)]
+    gflat = (gates.reshape(-1) * keep).astype(dt)
+    return (y_items * gflat[:, None]).reshape(T, k, -1).sum(axis=1)
+
+
 def default_capacity(num_tokens: int, top_k: int, num_buckets: int, factor: float) -> int:
     cap = math.ceil(num_tokens * top_k * factor / max(1, num_buckets))
     return max(4, int(cap))
+
+
+def scheduler_is_single_replica(scheduler) -> bool:
+    """True when the scheduler activates at most one physical replica per
+    logical expert per batch (AEBS and per-expert random do; per-item
+    token-hash does not).  Declared via a ``single_active_replica`` attribute
+    on the scheduler function; unknown schedulers conservatively return
+    False."""
+    return bool(getattr(scheduler, "single_active_replica", False))
+
+
+DISPATCH_FNS = {
+    "einsum": capacity_dispatch_ffn,
+    "scatter": scatter_dispatch_ffn,
+    "grouped": grouped_dispatch_ffn,
+}
 
 
 # ---------------------------------------------------------------------------
@@ -182,7 +377,7 @@ def moe_layer(
     x: jax.Array,  # [b, s, d]
     cfg,
     *,
-    dispatch: str = "einsum",  # einsum | scatter
+    dispatch: str = "einsum",  # einsum | scatter | grouped | ep
     layout_tables: Optional[Dict[str, jax.Array]] = None,
     slot_to_expert: Optional[jax.Array] = None,  # flat [S_total]
     num_instances: int = 0,
@@ -195,7 +390,11 @@ def moe_layer(
 
     Without a layout: buckets are the logical experts (training / monolithic
     baseline).  With layout + scheduler: buckets are physical replica slots
-    chosen by the scheduler (Janus serving path).
+    chosen by the scheduler (Janus serving path).  ``dispatch="grouped"`` is
+    the production serving default (see module docstring); on that path the
+    per-slot weight copy (:func:`gather_slot_weights`) is never performed —
+    single-active-replica schedulers collapse slots back to logical experts,
+    anything else reads weights slot-indirectly.
     """
     if dispatch == "ep":
         from repro.models import moe_ep
@@ -215,23 +414,48 @@ def moe_layer(
     b, s, d = x.shape
     x2d = x.reshape(b * s, d)
     gates, eids, probs = route(params["router"], x2d, cfg.top_k)
+    logical_weights = {k: params[k] for k in ("w_gate", "w_up", "w_down")}
 
     aux: Dict[str, jax.Array] = {}
+    bucket_map = None  # bucket → expert map for slot-indirect grouped dispatch
     if layout_tables is not None and scheduler is not None:
         slot_ids, load, _ = scheduler(eids, layout_tables, num_instances)
-        bucket_ids = slot_ids
         num_buckets = int(slot_to_expert.shape[0])
-        weights = gather_slot_weights(params, slot_to_expert)
+        # capacity is a per-*slot* budget regardless of bucketing, so the
+        # collapsed grouped path drops exactly the same tokens as the others
+        cap = capacity or default_capacity(b * s, cfg.top_k, num_buckets, cfg.capacity_factor)
         aux["load"] = load
         aux["a_max"] = jnp.max(load)
+        if dispatch == "grouped" and scheduler_is_single_replica(scheduler):
+            # ≤1 activated replica per expert → replica slots collapse back to
+            # logical experts: identical token sets per bucket, one batched
+            # GEMM over [E, d, f], zero weight copies or indirection.
+            # (invalid slot ids stay -1 → dropped by the dispatch plan)
+            bucket_ids = jnp.where(
+                slot_ids >= 0, slot_to_expert[jnp.maximum(slot_ids, 0)], -1
+            )
+            num_buckets = cfg.num_experts
+            weights = logical_weights
+        elif dispatch == "grouped":
+            bucket_ids = slot_ids
+            bucket_map = slot_to_expert
+            weights = logical_weights  # read slot-indirectly, never copied
+        else:
+            bucket_ids = slot_ids
+            weights = gather_slot_weights(params, slot_to_expert)
     else:
         bucket_ids = eids
         num_buckets = cfg.num_experts
-        weights = {k: params[k] for k in ("w_gate", "w_up", "w_down")}
-
-    cap = capacity or default_capacity(b * s, cfg.top_k, num_buckets, cfg.capacity_factor)
-    dispatch_fn = capacity_dispatch_ffn if dispatch == "einsum" else scatter_dispatch_ffn
-    y2d = dispatch_fn(x2d, bucket_ids, gates.astype(x.dtype), num_buckets, cap, weights)
+        cap = capacity or default_capacity(b * s, cfg.top_k, num_buckets, cfg.capacity_factor)
+        weights = logical_weights
+    if dispatch == "grouped":
+        y2d = grouped_dispatch_ffn(
+            x2d, bucket_ids, gates.astype(x.dtype), num_buckets, cap, weights,
+            slot_to_expert=bucket_map,
+        )
+    else:
+        dispatch_fn = DISPATCH_FNS[dispatch]
+        y2d = dispatch_fn(x2d, bucket_ids, gates.astype(x.dtype), num_buckets, cap, weights)
 
     if "shared" in params:
         y2d = y2d + ffn(params["shared"], x2d, "swiglu")

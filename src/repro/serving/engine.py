@@ -8,7 +8,9 @@ The engine serves a stream of requests against one model deployment:
     positions (continuous batching — slots join/leave independently);
   * MoE architectures route through the scheduled slot path: routing →
     AEBS (or a baseline scheduler) → replica-slot dispatch, with per-layer
-    ``a_max`` telemetry surfaced to the controller;
+    ``a_max`` telemetry surfaced to the controller.  Dispatch defaults to
+    the sort-based grouped path (``repro.models.moe.grouped_dispatch_ffn``)
+    — no per-step ``[S_total, d, f]`` weight materialisation;
   * timing: wall-clock by default, or a pluggable ``step_time_fn`` driven by
     the analytic performance model (used in tests and the simulator).
 
@@ -36,7 +38,7 @@ from repro.serving.request import Request
 
 SCHEDULERS = {
     "aebs": aebs_assign,
-    "aebs_kernel": lambda e, t, n: aebs_schedule(e, t, n),  # Pallas TPU kernel
+    "aebs_kernel": aebs_schedule,  # Pallas TPU kernel, same Algorithm-1 contract
     "random": baselines.random_assign,
     "token_hash": baselines.token_hash_assign,
     "none": None,
@@ -54,6 +56,7 @@ class ServingEngine:
         layout: Optional[ReplicaLayout] = None,
         scheduler: str = "aebs",
         capacity_tokens: Optional[int] = None,
+        dispatch: str = "grouped",  # grouped = slot-indirect hot path (no weight copy)
         step_time_fn: Optional[Callable[[int], float]] = None,
         extra_builder: Optional[Callable[[int], Dict]] = None,
     ):
@@ -75,7 +78,7 @@ class ServingEngine:
         moe_ctx = None
         if cfg.has_moe and layout is not None and scheduler != "none":
             moe_ctx = dict(
-                dispatch="scatter",
+                dispatch=dispatch,
                 layout_tables=layout.device_tables(),
                 slot_to_expert=jnp.asarray(layout.slot_to_expert.reshape(-1)),
                 num_instances=layout.num_instances,

@@ -1,0 +1,44 @@
+"""Optional-hypothesis shim for the property-test modules.
+
+``from _hypo import given, settings, st`` behaves exactly like the real
+hypothesis imports when the package is installed.  When it is not, the
+decorators degrade to ``pytest.mark.skip`` so the property tests skip
+cleanly while the rest of each module still collects and runs.
+"""
+
+try:
+    from hypothesis import given, settings  # noqa: F401
+    from hypothesis import strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised when hypothesis is absent
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    def given(*_a, **_k):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*_a, **_k):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    class _StrategiesStub:
+        """Stands in for ``hypothesis.strategies`` at module-import time.
+
+        ``st.composite`` must return a callable (strategy factories are
+        invoked inside ``@given(...)`` argument lists); every other strategy
+        constructor just returns None — the bodies never execute because
+        ``given`` skips the test.
+        """
+
+        @staticmethod
+        def composite(_fn):
+            return lambda *a, **k: None
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _StrategiesStub()

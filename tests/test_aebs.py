@@ -4,8 +4,7 @@ and the scheduler's invariants hold on arbitrary routing patterns."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypo import given, settings, st
 
 from repro.core.aebs import ReplicaLayout, aebs_assign, aebs_numpy
 from repro.core.amax import make_routing_trace

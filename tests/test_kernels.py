@@ -84,6 +84,36 @@ def test_expert_ffn_sweep(S, CAP, d, f, dtype):
     assert (np.asarray(got, np.float32)[inact] == 0).all()
 
 
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("S,E,CAP,d,f", [
+    (6, 4, 16, 128, 256),     # replica slots > experts
+    (10, 3, 8, 256, 512),     # heavy replication + an empty slot
+])
+def test_expert_ffn_slot_indirect_sweep(S, E, CAP, d, f, dtype):
+    """Slot-indirect form: logical [E, d, f] weights + flat slot→expert map
+    as a scalar-prefetch operand — no stacked weight copy is ever built."""
+    from repro.kernels.expert_ffn.ops import expert_ffn_grouped
+    from repro.kernels.expert_ffn.ref import expert_ffn_grouped_ref
+
+    ks = jax.random.split(jax.random.PRNGKey(S * f + 1), 5)
+    x = (jax.random.normal(ks[0], (S, CAP, d), jnp.float32) * 0.5).astype(dtype)
+    wg = (jax.random.normal(ks[1], (E, d, f), jnp.float32) * 0.05).astype(dtype)
+    wu = (jax.random.normal(ks[2], (E, d, f), jnp.float32) * 0.05).astype(dtype)
+    wd = (jax.random.normal(ks[3], (E, f, d), jnp.float32) * 0.05).astype(dtype)
+    m = np.arange(S) % (E + 1)
+    s2e = jnp.asarray(np.where(m == E, -1, m), jnp.int32)  # sprinkle empty slots
+    act = jax.random.bernoulli(ks[4], 0.7, (S,)).astype(jnp.int32)
+    got = expert_ffn_grouped(x, wg, wu, wd, s2e, act)
+    want = expert_ffn_grouped_ref(x, wg, wu, wd, s2e, act)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=tol, rtol=tol
+    )
+    # inactive or empty slots are exactly zero
+    dead = (np.asarray(act) == 0) | (np.asarray(s2e) < 0)
+    assert (np.asarray(got, np.float32)[dead] == 0).all()
+
+
 # ---------------------------------------------------------------------------
 # Flash-decode attention kernel
 # ---------------------------------------------------------------------------

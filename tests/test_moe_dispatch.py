@@ -4,12 +4,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypo import given, settings, st
 
 from repro.configs import get_config
 from repro.core.aebs import ReplicaLayout, aebs_assign
 from repro.models import moe as moe_mod
+
+
+def _rand_weights(keys, E, d, f, scale=0.05):
+    return {
+        "w_gate": jax.random.normal(keys[0], (E, d, f), jnp.float32) * scale,
+        "w_up": jax.random.normal(keys[1], (E, d, f), jnp.float32) * scale,
+        "w_down": jax.random.normal(keys[2], (E, f, d), jnp.float32) * scale,
+    }
 
 
 @st.composite
@@ -26,25 +33,177 @@ def dispatch_case(draw):
 
 @given(dispatch_case())
 @settings(max_examples=25, deadline=None)
-def test_einsum_scatter_equivalence(case):
-    """The two dispatch implementations are semantically identical, including
-    capacity-overflow dropping."""
+def test_dispatch_equivalence(case):
+    """All three dispatch implementations are semantically identical,
+    including capacity-overflow dropping."""
     T, k, E, d, f, cap, seed = case
     keys = jax.random.split(jax.random.PRNGKey(seed), 6)
     x = jax.random.normal(keys[0], (T, d), jnp.float32)
     ids = jax.random.randint(keys[1], (T, k), 0, E)
     gates = jax.nn.softmax(jax.random.normal(keys[2], (T, k), jnp.float32))
-    w = {
-        "w_gate": jax.random.normal(keys[3], (E, d, f), jnp.float32) * 0.05,
-        "w_up": jax.random.normal(keys[4], (E, d, f), jnp.float32) * 0.05,
-        "w_down": jax.random.normal(keys[5], (E, f, d), jnp.float32) * 0.05,
-    }
+    w = _rand_weights(keys[3:], E, d, f)
     y1 = moe_mod.capacity_dispatch_ffn(x, ids, gates, E, cap, w)
     y2 = moe_mod.scatter_dispatch_ffn(x, ids, gates, E, cap, w)
+    y3 = moe_mod.grouped_dispatch_ffn(x, ids, gates, E, cap, w)
     np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-5, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y3), atol=1e-5, rtol=1e-4)
 
 
-def test_scheduling_is_numerically_transparent():
+# ---------------------------------------------------------------------------
+# Grouped dispatch (sort-based, slot-indirect) — the production hot path
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("top_k", [1, 2, 4])
+def test_grouped_matches_einsum_oracle(top_k):
+    """Grouped dispatch equals the einsum oracle across top_k, at a capacity
+    that forces some overflow drops."""
+    T, E, d, f = 40, 8, 32, 64
+    keys = jax.random.split(jax.random.PRNGKey(top_k), 6)
+    x = jax.random.normal(keys[0], (T, d), jnp.float32)
+    ids = jax.random.randint(keys[1], (T, top_k), 0, E)
+    gates = jax.nn.softmax(jax.random.normal(keys[2], (T, top_k), jnp.float32))
+    w = _rand_weights(keys[3:], E, d, f)
+    cap = max(1, (T * top_k) // (2 * E))  # deliberately tight → drops
+    y_oracle = moe_mod.capacity_dispatch_ffn(x, ids, gates, E, cap, w)
+    y_grouped = moe_mod.grouped_dispatch_ffn(x, ids, gates, E, cap, w)
+    np.testing.assert_allclose(
+        np.asarray(y_oracle), np.asarray(y_grouped), atol=1e-5, rtol=1e-4
+    )
+
+
+@pytest.mark.parametrize("backend", ["stream", "kernel"])
+def test_grouped_slot_indirect_backends(backend):
+    """Slot-indirect grouped dispatch (replica slots → logical experts via a
+    flat map, no weight materialisation) matches the oracle run on explicitly
+    gathered weights, for both the stream loop and the Pallas kernel."""
+    T, k, E, d, f = 24, 2, 6, 32, 64
+    S, cap = 9, 6
+    keys = jax.random.split(jax.random.PRNGKey(7), 6)
+    x = jax.random.normal(keys[0], (T, d), jnp.float32)
+    ids = jax.random.randint(keys[1], (T, k), 0, S)
+    gates = jax.nn.softmax(jax.random.normal(keys[2], (T, k), jnp.float32))
+    w = _rand_weights(keys[3:], E, d, f)
+    s2e = jnp.asarray(np.array([0, 1, 2, 3, 4, 5, 0, 1, -1], np.int32))
+    y = moe_mod.grouped_dispatch_ffn(
+        x, ids, gates, S, cap, w, slot_to_expert=s2e, backend=backend
+    )
+    # oracle: gather per-slot weights (allowed off the hot path) and drop
+    # items routed to the empty slot
+    w_slots = moe_mod.gather_slot_weights(w, s2e)
+    ids_masked = jnp.where(s2e[ids] >= 0, ids, -1)
+    mask = (ids_masked >= 0).reshape(-1)
+    y_oracle = moe_mod.capacity_dispatch_ffn(
+        x, jnp.maximum(ids_masked, 0), gates, S, cap, w_slots, item_mask=mask
+    )
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_oracle), atol=1e-5, rtol=1e-4)
+
+
+def test_grouped_bf16_matches_oracle():
+    """bf16 production dtype: grouped output tracks the einsum oracle to
+    ≤1e-2."""
+    T, k, E, d, f, cap = 64, 2, 8, 64, 128, 12
+    keys = jax.random.split(jax.random.PRNGKey(21), 6)
+    x = (jax.random.normal(keys[0], (T, d), jnp.float32) * 0.5).astype(jnp.bfloat16)
+    ids = jax.random.randint(keys[1], (T, k), 0, E)
+    gates = jax.nn.softmax(jax.random.normal(keys[2], (T, k), jnp.float32)).astype(jnp.bfloat16)
+    w = jax.tree.map(lambda a: a.astype(jnp.bfloat16), _rand_weights(keys[3:], E, d, f, scale=0.1))
+    y_oracle = moe_mod.capacity_dispatch_ffn(x, ids, gates, E, cap, w)
+    y_grouped = moe_mod.grouped_dispatch_ffn(x, ids, gates, E, cap, w)
+    np.testing.assert_allclose(
+        np.asarray(y_oracle, np.float32), np.asarray(y_grouped, np.float32),
+        atol=1e-2, rtol=1e-2,
+    )
+
+
+def test_grouped_inactive_slots_zero_no_nans():
+    """Buckets with no tokens and empty slots (-1) contribute exact zeros,
+    and the output never contains NaNs."""
+    T, k, E, d, f = 16, 1, 4, 16, 32
+    S, cap = 8, 4
+    keys = jax.random.split(jax.random.PRNGKey(11), 6)
+    x = jax.random.normal(keys[0], (T, d), jnp.float32)
+    ids = jnp.zeros((T, k), jnp.int32)  # everything → slot 0; slots 1.. idle
+    gates = jnp.ones((T, k), jnp.float32)
+    w = _rand_weights(keys[3:], E, d, f)
+    s2e = jnp.asarray(np.array([2, 0, 1, 3, 2, -1, -1, -1], np.int32))
+    for backend in ("stream", "kernel"):
+        y = moe_mod.grouped_dispatch_ffn(
+            x, ids, gates, S, cap, w, slot_to_expert=s2e, backend=backend
+        )
+        y = np.asarray(y)
+        assert np.isfinite(y).all()
+        assert np.abs(y[:cap]).max() > 0  # within capacity: served
+        assert np.abs(y[cap:]).max() == 0  # overflow of slot 0: dropped
+
+
+def test_grouped_moe_layer_with_and_without_shared_experts():
+    """moe_layer(dispatch="grouped") equals the einsum default, with and
+    without a shared-expert branch."""
+    for name, has_shared in (
+        ("qwen2-moe-a2.7b-reduced", True),
+        ("phi3.5-moe-42b-a6.6b-reduced", False),
+    ):
+        cfg = get_config(name)
+        params = moe_mod.init_moe(cfg, jax.random.PRNGKey(0), jnp.float32)
+        assert ("shared" in params) == has_shared
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model), jnp.float32) * 0.3
+        y_e = moe_mod.moe_layer(params, x, cfg, capacity=64)
+        y_g = moe_mod.moe_layer(params, x, cfg, dispatch="grouped", capacity=64)
+        np.testing.assert_allclose(np.asarray(y_e), np.asarray(y_g), atol=1e-5, rtol=1e-4)
+
+
+def test_grouped_scheduled_no_weight_materialization(monkeypatch):
+    """The grouped serving path must never call gather_slot_weights — that
+    [S_total, d, f] copy is exactly what it exists to remove."""
+    cfg = get_config("qwen2-moe-a2.7b-reduced")
+    params = moe_mod.init_moe(cfg, jax.random.PRNGKey(0), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model), jnp.float32) * 0.3
+    layout = ReplicaLayout.round_robin(cfg.num_experts, 2, 3)
+    kw = dict(
+        layout_tables=layout.device_tables(),
+        slot_to_expert=jnp.asarray(layout.slot_to_expert.reshape(-1)),
+        num_instances=2,
+        scheduler=aebs_assign,
+        capacity=64,
+    )
+
+    calls = []
+    real = moe_mod.gather_slot_weights
+    monkeypatch.setattr(
+        moe_mod, "gather_slot_weights", lambda *a, **k: calls.append(1) or real(*a, **k)
+    )
+    y_scatter = moe_mod.moe_layer(params, x, cfg, dispatch="scatter", **kw)
+    assert calls, "scatter path is expected to materialise slot weights"
+    calls.clear()
+    y_grouped = moe_mod.moe_layer(params, x, cfg, dispatch="grouped", **kw)
+    assert not calls, "grouped path must not materialise slot weights"
+    np.testing.assert_allclose(
+        np.asarray(y_scatter), np.asarray(y_grouped), atol=1e-5, rtol=1e-4
+    )
+
+
+def test_sort_plan_matches_onehot_positions():
+    """The argsort-based position computation reproduces the one-hot/cumsum
+    arrival-order semantics, including masked items."""
+    rng = np.random.default_rng(3)
+    flat = jnp.asarray(rng.integers(0, 7, size=64).astype(np.int32))
+    mask = jnp.asarray(rng.random(64) < 0.7)
+    plan = moe_mod.sort_dispatch_plan(flat, 7, capacity=5, item_mask=mask)
+    pos_ref = moe_mod._positions_in_bucket(flat, 7, mask)
+    got = np.asarray(plan["pos"])
+    want = np.asarray(pos_ref)
+    keep = np.asarray(mask)
+    assert np.array_equal(got[keep], want[keep])
+
+
+# ---------------------------------------------------------------------------
+# Scheduling transparency
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dispatch", ["einsum", "grouped"])
+def test_scheduling_is_numerically_transparent(dispatch):
     """Rewriting logical experts to replica slots must not change the layer's
     output (replicas are exact copies): the Janus scheduled path equals the
     plain logical path when capacity is ample."""
@@ -60,6 +219,7 @@ def test_scheduling_is_numerically_transparent():
         params,
         x,
         cfg,
+        dispatch=dispatch,
         layout_tables=layout.device_tables(),
         slot_to_expert=jnp.asarray(layout.slot_to_expert.reshape(-1)),
         num_instances=2,
@@ -70,28 +230,34 @@ def test_scheduling_is_numerically_transparent():
 
 
 def test_scheduler_choice_transparent():
-    """AEBS vs token-hash vs random: same numbers, different placement."""
+    """AEBS vs token-hash vs random: same numbers, different placement.
+
+    On the grouped path this also exercises both FFN routes: AEBS/random
+    collapse to logical experts, token-hash stays slot-indirect."""
     from repro.core import baselines
 
     cfg = get_config("qwen2-moe-a2.7b-reduced")
     params = moe_mod.init_moe(cfg, jax.random.PRNGKey(0), jnp.float32)
     x = jax.random.normal(jax.random.PRNGKey(2), (1, 12, cfg.d_model), jnp.float32) * 0.3
     layout = ReplicaLayout.round_robin(cfg.num_experts, num_instances=2, capacity=4)
-    outs = []
-    for sched in (aebs_assign, baselines.random_assign, baselines.token_hash_assign):
-        outs.append(
-            moe_mod.moe_layer(
-                params, x, cfg,
-                layout_tables=layout.device_tables(),
-                slot_to_expert=jnp.asarray(layout.slot_to_expert.reshape(-1)),
-                num_instances=2, scheduler=sched, capacity=64,
+    for dispatch in ("scatter", "grouped"):
+        outs = []
+        for sched in (aebs_assign, baselines.random_assign, baselines.token_hash_assign):
+            outs.append(
+                moe_mod.moe_layer(
+                    params, x, cfg,
+                    dispatch=dispatch,
+                    layout_tables=layout.device_tables(),
+                    slot_to_expert=jnp.asarray(layout.slot_to_expert.reshape(-1)),
+                    num_instances=2, scheduler=sched, capacity=64,
+                )
             )
-        )
-    np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(outs[1]), atol=1e-5, rtol=1e-4)
-    np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(outs[2]), atol=1e-5, rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(outs[1]), atol=1e-5, rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(outs[2]), atol=1e-5, rtol=1e-4)
 
 
-def test_capacity_drops_tokens():
+@pytest.mark.parametrize("dispatch", ["einsum", "grouped"])
+def test_capacity_drops_tokens(dispatch):
     """cap=1 with a hot expert: overflow items contribute nothing."""
     T, k, E, d, f = 8, 1, 2, 16, 32
     keys = jax.random.split(jax.random.PRNGKey(3), 4)
@@ -103,7 +269,8 @@ def test_capacity_drops_tokens():
         "w_up": jax.random.normal(keys[2], (E, d, f)) * 0.1,
         "w_down": jax.random.normal(keys[3], (E, f, d)) * 0.1,
     }
-    y = moe_mod.capacity_dispatch_ffn(x, ids, gates, E, 1, w)
+    fn = moe_mod.DISPATCH_FNS[dispatch]
+    y = fn(x, ids, gates, E, 1, w)
     assert np.abs(np.asarray(y[0])).max() > 0  # first token served
     assert np.abs(np.asarray(y[1:])).max() == 0  # the rest dropped
 

@@ -13,6 +13,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
 from repro.configs import get_config
 from repro.core.aebs import ReplicaLayout, aebs_assign
+from repro.launch.mesh import use_mesh
 from repro.models import moe as moe_mod
 from repro.models.moe_ep import moe_layer_ep
 
@@ -24,22 +25,35 @@ x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, cfg.d_model), jnp.float32) *
 # reference: single-device einsum dispatch, ample capacity
 y_ref = moe_mod.moe_layer(params, x, cfg, capacity=64)
 
-with jax.set_mesh(mesh):
-    # logical EP mode (training path)
-    y_ep = jax.jit(lambda p, xx: moe_layer_ep(
-        p, xx, cfg, mesh=mesh, dp_axes=("data",), model_axis="model",
-        mode="logical", capacity_factor=8.0))(params, x)
-    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_ep), atol=2e-4, rtol=2e-3)
+with use_mesh(mesh):
+    # logical EP mode (training path) — scatter and grouped bodies
+    for disp in ("scatter", "grouped"):
+        y_ep = jax.jit(lambda p, xx: moe_layer_ep(
+            p, xx, cfg, mesh=mesh, dp_axes=("data",), model_axis="model",
+            mode="logical", dispatch=disp, capacity_factor=8.0))(params, x)
+        np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_ep), atol=2e-4, rtol=2e-3)
 
     # scheduled EP mode (serving path): slots divisible by model axis
     layout = ReplicaLayout.round_robin(cfg.num_experts, 4, 2)
     stx = jnp.asarray(layout.slot_to_expert.reshape(-1))
-    y_sched = jax.jit(lambda p, xx: moe_layer_ep(
+    for disp in ("scatter", "grouped"):
+        y_sched = jax.jit(lambda p, xx: moe_layer_ep(
+            p, xx, cfg, mesh=mesh, dp_axes=("data",), model_axis="model",
+            mode="scheduled", dispatch=disp, scheduler=aebs_assign,
+            layout_tables=layout.device_tables(), slot_to_expert=stx,
+            num_instances=4, capacity_factor=8.0))(params, x)
+        np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_sched), atol=2e-4, rtol=2e-3)
+
+    # scheduled + grouped with weights pinned at deployment (identity map)
+    pinned = dict(params)
+    for n in ("w_gate", "w_up", "w_down"):
+        pinned[n] = params[n][jnp.maximum(stx, 0)]
+    y_pin = jax.jit(lambda p, xx: moe_layer_ep(
         p, xx, cfg, mesh=mesh, dp_axes=("data",), model_axis="model",
-        mode="scheduled", scheduler=aebs_assign,
+        mode="scheduled", dispatch="grouped", scheduler=aebs_assign,
         layout_tables=layout.device_tables(), slot_to_expert=stx,
-        num_instances=4, capacity_factor=8.0))(params, x)
-    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_sched), atol=2e-4, rtol=2e-3)
+        num_instances=4, capacity_factor=8.0))(pinned, x)
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_pin), atol=2e-4, rtol=2e-3)
 
     # gradients flow through the EP path
     def loss(p):

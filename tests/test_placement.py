@@ -1,8 +1,7 @@
 """Replica allocation + activation-aware placement (Appendix B) properties."""
 
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypo import given, settings, st
 
 from repro.core.amax import coactivation_matrix, make_routing_trace
 from repro.core.placement import (
