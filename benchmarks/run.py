@@ -29,6 +29,7 @@ MODULES = [
     "sec6_pipelining",
     "engine_schedulers",
     "moe_dispatch_bench",
+    "disagg_pipeline_bench",
     "roofline_report",
 ]
 

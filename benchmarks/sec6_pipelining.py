@@ -13,26 +13,42 @@ synchronisation overhead.  We quantify that with the calibrated layer model:
 
 from __future__ import annotations
 
+from typing import Dict, Tuple
+
 from benchmarks.common import Row, paper_perf_model, timeit
+
+SYNC = 10e-6  # per-micro-batch hand-off overhead
+
+
+def pipeline_times(
+    pm, B: float, n_a: int, n_e: int, sync: float = SYNC, ms: Tuple[int, ...] = (2, 4, 8)
+) -> Tuple[float, Dict[int, float]]:
+    """Analytic sequential vs pipelined step time for one MoE layer pass.
+
+    Returns ``(t_seq, {m: t_pipe})`` — the §6 model the measured
+    ``benchmarks.disagg_pipeline_bench`` numbers are printed against."""
+    ta = pm.t_attn(B / n_a)
+    tm, _ = pm.t_moe(n_e, B)
+    tc = pm.t_comm(n_a, n_e, B)
+    t_seq = ta + tm + tc
+    pipes: Dict[int, float] = {}
+    for m in ms:
+        ta_m = pm.t_attn(B / n_a / m)
+        tm_m, _ = pm.t_moe(n_e, B / m)
+        stage = max(ta_m, tm_m)
+        pipes[m] = (m + 1) * stage + m * (sync + tc / m)
+    return t_seq, pipes
 
 
 def run() -> list[Row]:
     pm, _ = paper_perf_model()
     n_a, n_e = 4, 8
-    sync = 10e-6  # per-micro-batch hand-off overhead
     rows: list[Row] = []
     for B in (32, 64, 256, 2048):
         us = timeit(lambda: pm.tpot(B, n_a, n_e), repeat=2)
-        ta = pm.t_attn(B / n_a)
-        tm, _ = pm.t_moe(n_e, B)
-        tc = pm.t_comm(n_a, n_e, B)
-        t_seq = ta + tm + tc
+        t_seq, pipes = pipeline_times(pm, B, n_a, n_e)
         best = ("none", t_seq)
-        for m in (2, 4, 8):
-            ta_m = pm.t_attn(B / n_a / m)
-            tm_m, _ = pm.t_moe(n_e, B / m)
-            stage = max(ta_m, tm_m)
-            t_pipe = (m + 1) * stage + m * (sync + tc / m)
+        for m, t_pipe in pipes.items():
             if t_pipe < best[1]:
                 best = (f"m={m}", t_pipe)
         gain = (t_seq - best[1]) / t_seq * 100

@@ -2,14 +2,16 @@
 
 Two demonstrations, both REAL multi-device execution on CPU host devices:
 
-A. **Pool-mode m-to-n exchange (one MoE layer)** — m attention devices hold
-   the hidden states; each of n MoE devices holds its expert replica slots.
-   Activations are explicitly transferred attention→MoE (EGate: full
-   activations, no routing metadata), every MoE device runs the SAME AEBS
-   schedule (synchronisation-free redundancy, §3.4), computes only its local
-   slots, and partial outputs are combined back on the attention side.  The
-   script reports per-instance activated-expert counts and bytes moved, for
-   AEBS vs random scheduling, and the two-phase comm model's predicted cost.
+A. **Two-pool engine (pool mode)** — ``ServingEngine(executor="disagg")``
+   serves a continuous-batching request stream with attention stages on a
+   2-device attention pool and expert stages on a 4-device MoE pool.  Every
+   layer performs the explicit activation hand-off whose pattern (case-1 /
+   case-2) is chosen per step by the adaptive two-phase model; the engine
+   telemetry shows the regime, the bytes moved, and the AEBS ``a_max``.
+   Mid-run the autoscaling path is exercised for real: ``reconfigure``
+   grows the attention pool 2→3 while the MoE pool (and its pinned expert
+   weights) stays untouched — only the attention side re-lowers, and the
+   in-flight KV caches are preserved.
 
 B. **SPMD deployment (full model)** — the production mapping (DESIGN.md §2):
    a (data=2, model=4) mesh where the model axis is the MoE pool; the
@@ -26,87 +28,47 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config
-from repro.core.aebs import ReplicaLayout, aebs_assign, aebs_numpy
-from repro.core.baselines import random_numpy
-from repro.core.comm import H100, CommConfig, adaptive_two_phase, one_phase_cost
-from repro.core.disagg import DevicePools
+from repro.core.aebs import ReplicaLayout, aebs_assign
 from repro.models import model as model_mod
-from repro.models import moe as moe_mod
 from repro.launch.mesh import use_mesh
-from repro.models.moe_ep import moe_layer_ep
+from repro.serving.engine import ServingEngine
+from repro.serving.request import WorkloadSpec, sample_requests
+from repro.serving.trace import poisson_arrivals
 
 
 def pool_mode_demo():
-    print("=== A. pool-mode m-to-n exchange (explicit transfers) ===")
-    cfg = get_config("qwen2-moe-a2.7b-reduced")
-    m, n = 2, 4  # 2 attention instances, 4 MoE instances
-    pools = DevicePools.split(m, n)
-    layout = ReplicaLayout.round_robin(cfg.num_experts, n, 2)  # 4 experts, 8 slots
-    params = moe_mod.init_moe(cfg, jax.random.PRNGKey(0), jnp.float32)
-    slot_w = moe_mod.gather_slot_weights(params, jnp.asarray(layout.slot_to_expert.reshape(-1)))
+    print("=== A. two-pool engine: 2 attention + 4 MoE devices, real exchange ===")
+    cfg = get_config("dsv2-lite-reduced")
+    params = model_mod.init_params(cfg, 0)
+    layout = ReplicaLayout.round_robin(cfg.num_experts, 4, 2)
 
-    # expert slot weights pinned per MoE device
-    C = layout.capacity
-    w_per_dev = [
-        {k: jax.device_put(v[g * C : (g + 1) * C], pools.moe_devices[g]) for k, v in slot_w.items()}
-        for g in range(n)
-    ]
-    # hidden states live on the attention devices
-    T, d = 24, cfg.d_model
-    x_parts = [
-        jax.device_put(
-            jax.random.normal(jax.random.PRNGKey(1 + i), (T // m, d), jnp.float32) * 0.3,
-            pools.attn_devices[i],
-        )
-        for i in range(m)
-    ]
-
-    @jax.jit
-    def gate_and_schedule(x):
-        gates, eids, _ = moe_mod.route(params["router"], x, cfg.top_k)
-        slot_ids, load, _ = aebs_assign(eids, layout.device_tables(), n)
-        return gates, slot_ids, load
-
-    @jax.jit
-    def expert_partial(x, gates, slot_ids, w, g):
-        local = (slot_ids // C) == g
-        return moe_mod.scatter_dispatch_ffn(
-            x, slot_ids % C, gates.astype(x.dtype), C, 16, w,
-            item_mask=local.reshape(-1),
-        )
-
-    bytes_moved = 0
-    t0 = time.perf_counter()
-    # phase 1 analogue: aggregate the attention instances' activations
-    x_full = jnp.concatenate([jax.device_put(xp, pools.attn_devices[0]) for xp in x_parts])
-    partials = []
-    for g in range(n):
-        # EGate: ship FULL activations to MoE instance g (no metadata)
-        x_on_g = jax.device_put(x_full, pools.moe_devices[g])
-        bytes_moved += x_full.size * x_full.dtype.itemsize
-        gates, slot_ids, load = gate_and_schedule(x_on_g)  # redundant per instance
-        partials.append(expert_partial(x_on_g, gates, slot_ids, w_per_dev[g], g))
-    # combine back on the attention side
-    y = sum(jax.device_put(p, pools.attn_devices[0]) for p in partials)
-    y.block_until_ready()
-    wall = time.perf_counter() - t0
-    load_np = np.asarray(load)
-    print(f"  m={m} attn × n={n} MoE devices; {bytes_moved/1e3:.0f} KB moved, {wall*1e3:.0f} ms wall")
-    print(f"  per-instance activated experts (AEBS): {load_np.tolist()}  a_max={load_np.max()}")
-    rng = np.random.default_rng(0)
-    eids_host = np.asarray(
-        moe_mod.route(params["router"], np.asarray(x_full), cfg.top_k)[1]
+    eng = ServingEngine(
+        cfg, params, max_batch=6, cache_len=64, layout=layout,
+        scheduler="aebs", capacity_tokens=64,
+        executor="disagg", n_attn=2,
     )
-    _, load_r, _ = random_numpy(eids_host, layout, rng)
-    print(f"  per-instance activated experts (random): {load_r.tolist()}  a_max={load_r.max()}")
+    spec = WorkloadSpec(mean_input=6, mean_output=12, vocab_size=cfg.vocab_size,
+                        max_input=16, max_output=16, seed=0)
+    reqs = sample_requests(spec, poisson_arrivals(100.0, 0.12, seed=0)[:12], with_prompts=True)
 
-    c = CommConfig(n_attn=m, n_moe=n, bytes_per_token=2 * cfg.d_model, batch=T, hw=H100)
-    t2, regime = adaptive_two_phase(c)
-    print(f"  comm model: one-phase={one_phase_cost(c)*1e6:.1f}us  "
-          f"two-phase={t2*1e6:.1f}us ({regime})")
+    t0 = time.perf_counter()
+    eng.run(reqs[:6])
+    print(f"  phase 1 (2A4E): served 6 requests in {time.perf_counter()-t0:.1f}s wall")
+
+    relower = eng.reconfigure(n_attn=3)  # scale the attention pool only
+    print(f"  reconfigure 2A4E → 3A4E: re-lowered pools {relower} "
+          "(KV caches re-sharded in place, expert weights untouched)")
+
+    t0 = time.perf_counter()
+    m = eng.run(reqs[6:])
+    print(f"  phase 2 (3A4E): served 6 more in {time.perf_counter()-t0:.1f}s wall")
+    print(f"  telemetry: regimes={m['regime_counts']} "
+          f"bytes/step={m['transfer_bytes_per_step']:.0f} "
+          f"a_max mean={m['amax_mean']:.2f} max={m['amax_max']}")
+    print(f"  completed={m['completed']} tokens={m['tokens']} "
+          f"tpot_mean={m['tpot_mean']*1e3:.1f}ms")
 
 
 def spmd_mode_demo():

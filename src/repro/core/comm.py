@@ -94,14 +94,11 @@ def one_phase_cost(c: CommConfig) -> float:
     m×n messages of (B/m)·bytes each; messages serialise per NIC (per source
     instance: n sends) and every transfer crosses the slow fabric.
     """
+    # EGate sends full activations to every MoE instance, so each source puts
+    # its activation block on the wire once per destination.
     per_src_msgs = c.n_moe
-    per_src_bytes = c.total_bytes / c.n_attn  # its share, sent n times? no —
-    # each source sends its tokens once per destination *slice*; EGate sends
-    # full activations to every MoE instance, so per-destination payload is
-    # the full per-source activation block:
-    bytes_on_wire_per_src = per_src_bytes * c.n_moe
-    t = per_src_msgs * c.hw.alpha_slow + bytes_on_wire_per_src / c.hw.slow_bw
-    return t
+    bytes_on_wire_per_src = (c.total_bytes / c.n_attn) * c.n_moe
+    return per_src_msgs * c.hw.alpha_slow + bytes_on_wire_per_src / c.hw.slow_bw
 
 
 def two_phase_case1(c: CommConfig) -> float:

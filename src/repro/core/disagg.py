@@ -1,24 +1,38 @@
-"""Disaggregated cluster abstraction — Janus §3.1/§3.2 (R1).
+"""Disaggregated cluster abstraction — Janus §3.1/§3.2 (R1), now runnable.
 
 Maps the paper's two sub-clusters onto JAX device sets:
 
-* **Pool mode** (literal, used by the runnable serving engine/example): the
-  available devices are split into ``n_a`` attention devices and ``n_e`` MoE
-  devices; attention instances each hold a full attention-stack replica and a
-  KV-cache shard of the in-flight batch; MoE instances hold expert replica
-  slots.  Layer-wise exchange is an explicit device-to-device transfer
-  (the two-phase scheme decides its pattern).
+* **Pool mode** (literal, executed by
+  :class:`repro.serving.disagg.DisaggExecutor` behind
+  ``ServingEngine(executor="disagg")``): the available devices are split into
+  ``n_a`` attention devices and ``n_e`` MoE devices.  Attention instances
+  each hold a full attention-stack replica and a contiguous *batch shard* of
+  the in-flight KV caches; MoE instances hold their expert replica slots'
+  weights only.  Every layer performs a real hand-off: the post-attention
+  activations are moved attention→MoE with explicit ``device_put`` steps
+  whose pattern — case-1 direct node-to-node vs case-2 pairing + multicast —
+  is chosen per step by :func:`repro.core.comm.adaptive_two_phase` and
+  realised by :func:`plan_exchange` below.  Pools carry a ``node_size`` so
+  the two-phase schedule has a fabric hierarchy (fast intra-node / slow
+  inter-node) to exploit; on CPU hosts the hierarchy is simulated but the
+  transfer *schedule* (message count, per-fabric bytes) is the real one and
+  is surfaced in engine telemetry.
 
 * **SPMD mode** (production mesh, used by the multi-pod dry-run): the
   attention pool is the data-parallel axis group and the MoE pool is the
   model-axis expert-parallel group; the two-phase transfer appears as a
   hierarchically-decomposed all-gather/psum pair (DESIGN.md §2).
+
+:func:`reconfigure` produces the incremental-deployment object (§3.5); the
+pool-mode executor actuates it by re-lowering only the affected pool
+(attention and MoE counts move independently mid-run, KV caches are
+re-sharded in place).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 
@@ -45,26 +59,167 @@ class DisaggConfig:
 
 @dataclasses.dataclass
 class DevicePools:
+    """The two device sub-clusters plus their fabric hierarchy.
+
+    ``node_size`` is the number of consecutive devices sharing the fast
+    fabric (NVLink node / ICI neighbourhood); the two-phase exchange
+    aggregates within a node before crossing node boundaries.
+    """
+
     attn_devices: List[jax.Device]
     moe_devices: List[jax.Device]
+    node_size: int = 1
 
     @staticmethod
     def split(
-        n_attn: int, n_moe: int, devices: Optional[Sequence[jax.Device]] = None
+        n_attn: int,
+        n_moe: int,
+        devices: Optional[Sequence[jax.Device]] = None,
+        node_size: int = 1,
+        allow_reuse: bool = False,
     ) -> "DevicePools":
+        """Split ``devices`` into the two pools.
+
+        Attention devices are taken from the *front* of the list and MoE
+        devices from the *back*, so resizing one pool never relocates the
+        other's devices — an incremental reconfiguration (§3.5) then really
+        does leave the unaffected pool's weights in place.
+
+        ``allow_reuse=True`` maps pools onto too-few devices round-robin —
+        the degenerate single-host mode used by tests that must stay on one
+        device (the transfer schedule still runs; the puts are local).
+        """
         devs = list(devices if devices is not None else jax.devices())
         if len(devs) < n_attn + n_moe:
-            raise ValueError(
-                f"need {n_attn + n_moe} devices, have {len(devs)} "
-                "(set XLA_FLAGS=--xla_force_host_platform_device_count=N)"
+            if not allow_reuse:
+                raise ValueError(
+                    f"need {n_attn + n_moe} devices, have {len(devs)} "
+                    "(set XLA_FLAGS=--xla_force_host_platform_device_count=N)"
+                )
+            devs = [devs[i % len(devs)] for i in range(n_attn + n_moe)]
+        return DevicePools(devs[:n_attn], devs[len(devs) - n_moe :], node_size)
+
+    # -- fabric hierarchy ----------------------------------------------------
+    def _groups(self, devs: List[jax.Device]) -> List[List[jax.Device]]:
+        ns = max(1, self.node_size)
+        return [devs[i : i + ns] for i in range(0, len(devs), ns)]
+
+    @property
+    def attn_nodes(self) -> List[List[jax.Device]]:
+        return self._groups(self.attn_devices)
+
+    @property
+    def moe_nodes(self) -> List[List[jax.Device]]:
+        return self._groups(self.moe_devices)
+
+
+@dataclasses.dataclass(frozen=True)
+class TransferStep:
+    """One explicit device-to-device move in a realised exchange pattern.
+
+    ``src``/``dst`` are ``(pool, index)`` addresses — ``("attn", i)`` or
+    ``("moe", g)`` — rather than device objects, so the schedule stays
+    well-defined when pools alias physical devices (single-host testing).
+    ``chunk`` is the index of the payload chunk being moved (a chunk is one
+    attention node's aggregated activation block in case-1, one pair split in
+    case-2); ``fabric`` prices it for telemetry.
+    """
+
+    src: Tuple[str, int]
+    dst: Tuple[str, int]
+    chunk: int
+    fabric: str  # "fast" | "slow"
+    phase: int = 2  # 1 = intra-node shard aggregation, 2 = cross-pool move
+
+
+@dataclasses.dataclass(frozen=True)
+class Chunk:
+    """One payload chunk of a realised exchange.
+
+    ``members`` are the attention-pool device indices whose shards form the
+    chunk's parent node payload (aggregated on ``members[0]``, the node
+    leader); the chunk itself is row-split ``sub``/``n_subs`` of that
+    payload (``n_subs == 1`` means the whole node payload — case-1 and the
+    balanced case-2).  Case-2 subdivides so every pair link carries
+    ≈ total/pairs bytes, matching :func:`repro.core.comm.two_phase_case2`.
+    """
+
+    members: Tuple[int, ...]
+    sub: int = 0
+    n_subs: int = 1
+
+
+def plan_exchange(pools: DevicePools, regime: str) -> Tuple[List[Chunk], List[TransferStep]]:
+    """Realise the adaptive two-phase pattern as explicit per-node steps.
+
+    Returns ``(chunks, steps)``: the payload :class:`Chunk` list (in batch
+    row order) and the ordered ``device_put`` schedule that lands every
+    chunk on every MoE device:
+
+    * phase 1 (both cases): shard → node-leader aggregation over the fast
+      fabric;
+    * case-1: each node's chunk goes leader→leader to every MoE node
+      (slow), then leader→local devices (fast);
+    * case-2: the payload is split across ``pairs = max(attn_nodes,
+      moe_nodes)`` chunks; chunk ``p`` goes to the paired MoE node
+      ``p % moe_nodes`` (slow — one ≈total/pairs message per pair), then
+      MoE nodes redistribute chunks amongst themselves and multicast
+      locally (fast).
+    """
+    ns = max(1, pools.node_size)
+    n_attn, n_moe = len(pools.attn_devices), len(pools.moe_devices)
+    a_nodes = [tuple(range(i, min(i + ns, n_attn))) for i in range(0, n_attn, ns)]
+    m_nodes = [list(range(i, min(i + ns, n_moe))) for i in range(0, n_moe, ns)]
+
+    # case-2 subdivides node payloads so the pair count matches the model
+    pairs = max(len(a_nodes), len(m_nodes))
+    subs = -(-pairs // len(a_nodes)) if regime == "case2" else 1
+
+    chunks: List[Chunk] = []
+    steps: List[TransferStep] = []
+    for node in a_nodes:
+        first_cid = len(chunks)
+        for s in range(subs):
+            chunks.append(Chunk(node, s, subs))
+        for i in node[1:]:
+            steps.append(
+                TransferStep(("attn", i), ("attn", node[0]), first_cid, "fast", phase=1)
             )
-        return DevicePools(devs[:n_attn], devs[n_attn : n_attn + n_moe])
+
+    if regime == "case1":
+        for cid, ch in enumerate(chunks):
+            leader = ch.members[0]
+            for mnode in m_nodes:
+                steps.append(TransferStep(("attn", leader), ("moe", mnode[0]), cid, "slow"))
+                for g in mnode[1:]:
+                    steps.append(TransferStep(("moe", mnode[0]), ("moe", g), cid, "fast"))
+    elif regime == "case2":
+        # one-to-one pairing: every chunk crosses the slow fabric exactly once
+        dst_leader = {}
+        for cid, ch in enumerate(chunks):
+            mnode = m_nodes[cid % len(m_nodes)]
+            steps.append(
+                TransferStep(("attn", ch.members[0]), ("moe", mnode[0]), cid, "slow")
+            )
+            dst_leader[cid] = mnode[0]
+        # destination-side redistribution + local multicast (fast fabric)
+        for mnode in m_nodes:
+            for cid in range(len(chunks)):
+                holder = dst_leader[cid]
+                if holder != mnode[0]:
+                    steps.append(TransferStep(("moe", holder), ("moe", mnode[0]), cid, "fast"))
+                for g in mnode[1:]:
+                    steps.append(TransferStep(("moe", mnode[0]), ("moe", g), cid, "fast"))
+    else:
+        raise ValueError(regime)
+    return chunks, steps
 
 
 def reconfigure(
     cfg_from: DisaggConfig, n_attn: int, n_moe: int, layout: ReplicaLayout
 ) -> DisaggConfig:
-    """Incremental reconfiguration (§3.5): a new deployment object; in SPMD
-    JAX the engine re-lowers for the new pool sizes (DESIGN.md §2 —
-    'recompile-and-swap' actuation)."""
+    """Incremental reconfiguration (§3.5): a new deployment object.  The
+    pool-mode executor actuates it with ``DisaggExecutor.reconfigure`` —
+    re-lowering only the pool whose count changed — while the SPMD engine
+    re-lowers for the new mesh ('recompile-and-swap', DESIGN.md §2)."""
     return dataclasses.replace(cfg_from, n_attn=n_attn, n_moe=n_moe, layout=layout)

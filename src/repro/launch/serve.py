@@ -23,6 +23,13 @@ def main():
     ap.add_argument("--n-instances", type=int, default=4)
     ap.add_argument("--slots", type=int, default=0, help="expert slots per instance")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--executor", default="mono", choices=["mono", "disagg"],
+        help="disagg = two-pool execution (attention/MoE on separate devices; "
+        "set XLA_FLAGS=--xla_force_host_platform_device_count=N for real pools)",
+    )
+    ap.add_argument("--n-attn", type=int, default=2, help="attention pool size (disagg)")
+    ap.add_argument("--ping-pong", action="store_true", help="m=2 micro-batch overlap (disagg)")
     args = ap.parse_args()
 
     from repro.configs import get_config
@@ -51,8 +58,14 @@ def main():
         cache_len=args.cache_len,
         layout=layout,
         scheduler=args.scheduler,
+        executor=args.executor,
+        n_attn=args.n_attn,
+        ping_pong=args.ping_pong,
     )
-    print(f"serving {len(reqs)} requests on {cfg.name} (scheduler={args.scheduler})")
+    print(
+        f"serving {len(reqs)} requests on {cfg.name} "
+        f"(scheduler={args.scheduler}, executor={args.executor})"
+    )
     m = eng.run(reqs)
     for k, v in m.items():
         print(f"  {k:20s} {v:.4f}" if isinstance(v, float) else f"  {k:20s} {v}")

@@ -103,6 +103,47 @@ def pad_attention_heads(params, cfg: ModelConfig, n_model: int):
     return jax.tree_util.tree_map_with_path(walk, params)
 
 
+def build_disagg_executor(
+    cfg: ModelConfig,
+    params,
+    n_attn: int,
+    n_moe: int,
+    *,
+    max_batch: int,
+    cache_len: int,
+    layout: Optional[ReplicaLayout] = None,
+    scheduler=aebs_assign,
+    capacity: Optional[int] = None,
+    ping_pong: bool = False,
+    node_size: int = 1,
+    devices=None,
+):
+    """Launch-layer entry for the two-pool deployment: split the device set
+    into (n_attn, n_moe) pools, derive a default replica layout when none is
+    given, and lower the per-layer stage functions onto the pools.
+
+    The returned :class:`repro.serving.disagg.DisaggExecutor` is what a
+    controller decision later re-lowers incrementally (only the affected
+    pool) via ``executor.reconfigure`` — see ``repro.serving.controller
+    .AutoScaler.actuate``."""
+    from repro.core.disagg import DevicePools
+    from repro.serving.disagg import DisaggExecutor
+
+    devs = list(devices) if devices is not None else jax.devices()
+    pools = DevicePools.split(
+        n_attn, n_moe, devs, node_size=node_size,
+        allow_reuse=len(devs) < n_attn + n_moe,
+    )
+    if layout is None:
+        layout = serving_layout(cfg, n_moe)
+    return DisaggExecutor(
+        cfg, params, pools, layout,
+        max_batch=max_batch, cache_len=cache_len,
+        scheduler=scheduler, capacity=capacity, ping_pong=ping_pong,
+        devices=devs,
+    )
+
+
 def make_moe_ctx(
     cfg: ModelConfig, mesh, mode: str, scheduler=aebs_assign, fsdp: bool = False
 ) -> Optional[Dict]:

@@ -268,37 +268,26 @@ def scatter_dispatch_ffn(
     return (y_items * gflat[:, None]).reshape(T, k, -1).sum(axis=1)
 
 
-def grouped_dispatch_ffn(
+def grouped_dispatch_items(
     x2d: jax.Array,  # [T, d]
     bucket_ids: jax.Array,  # [T, k]
-    gates: jax.Array,  # [T, k]
     num_buckets: int,
     capacity: int,
     weights: Params,  # stacked [B, ...] (map None) or logical [E, ...] (map given)
     slot_to_expert: Optional[jax.Array] = None,  # [B] int32 bucket → expert, -1 empty
     item_mask: Optional[jax.Array] = None,  # [T*k] bool
     backend: str = "auto",  # auto | einsum | stream | kernel
-) -> jax.Array:
-    """Sort-based grouped dispatch — the production hot path.
+) -> Tuple[jax.Array, jax.Array]:
+    """Grouped dispatch up to the per-item expert outputs.
 
-    Token permutation is a stable argsort (no one-hot masks, no
-    ``jnp.repeat``); the capacity buffer is built by gather from segment
-    offsets.  The expert FFN runs:
-
-    * ``einsum``  — one batched GEMM over the bucket-stacked weights (used
-      when buckets *are* logical experts, i.e. ``slot_to_expert is None``);
-    * ``kernel``  — the Pallas grouped kernel: ``slot_to_expert`` is a
-      scalar-prefetch operand and weights stream straight from the logical
-      ``[E, d, f]`` arrays (TPU; interpret elsewhere — tests only);
-    * ``stream``  — :func:`stream_slot_ffn`, a loop over *activated* slots
-      with block weight streaming (CPU/GPU production fallback);
-    * ``auto``    — einsum if buckets are experts, else kernel on TPU and
-      stream elsewhere.
-
-    Inactive buckets (no tokens, or ``slot_to_expert == -1``) contribute
-    exact zeros and — on kernel/stream backends — stream no weights.
+    Returns ``(y_items [T*k, d], keep [T*k] bool)`` — the expert output of
+    every (token, choice) item *before* gate-weighting and the top-k sum.
+    :func:`grouped_dispatch_ffn` finishes the combine locally; the
+    disaggregated executor instead ships these items back to the attention
+    pool and combines there, so both executors share the exact op order.
+    Rows with ``keep == False`` are arbitrary and must be gated to zero.
     """
-    T, k = bucket_ids.shape
+    k = bucket_ids.shape[1]
     dt = x2d.dtype
     flat = bucket_ids.reshape(-1)
     plan = sort_dispatch_plan(flat, num_buckets, capacity, item_mask)
@@ -342,6 +331,45 @@ def grouped_dispatch_ffn(
     keep = plan["keep"]
     pos = plan["pos"]
     y_items = out[jnp.where(keep, flat, 0), jnp.minimum(pos, capacity - 1)]
+    return y_items, keep
+
+
+def grouped_dispatch_ffn(
+    x2d: jax.Array,  # [T, d]
+    bucket_ids: jax.Array,  # [T, k]
+    gates: jax.Array,  # [T, k]
+    num_buckets: int,
+    capacity: int,
+    weights: Params,  # stacked [B, ...] (map None) or logical [E, ...] (map given)
+    slot_to_expert: Optional[jax.Array] = None,  # [B] int32 bucket → expert, -1 empty
+    item_mask: Optional[jax.Array] = None,  # [T*k] bool
+    backend: str = "auto",  # auto | einsum | stream | kernel
+) -> jax.Array:
+    """Sort-based grouped dispatch — the production hot path.
+
+    Token permutation is a stable argsort (no one-hot masks, no
+    ``jnp.repeat``); the capacity buffer is built by gather from segment
+    offsets.  The expert FFN runs:
+
+    * ``einsum``  — one batched GEMM over the bucket-stacked weights (used
+      when buckets *are* logical experts, i.e. ``slot_to_expert is None``);
+    * ``kernel``  — the Pallas grouped kernel: ``slot_to_expert`` is a
+      scalar-prefetch operand and weights stream straight from the logical
+      ``[E, d, f]`` arrays (TPU; interpret elsewhere — tests only);
+    * ``stream``  — :func:`stream_slot_ffn`, a loop over *activated* slots
+      with block weight streaming (CPU/GPU production fallback);
+    * ``auto``    — einsum if buckets are experts, else kernel on TPU and
+      stream elsewhere.
+
+    Inactive buckets (no tokens, or ``slot_to_expert == -1``) contribute
+    exact zeros and — on kernel/stream backends — stream no weights.
+    """
+    T, k = bucket_ids.shape
+    dt = x2d.dtype
+    y_items, keep = grouped_dispatch_items(
+        x2d, bucket_ids, num_buckets, capacity, weights,
+        slot_to_expert=slot_to_expert, item_mask=item_mask, backend=backend,
+    )
     gflat = (gates.reshape(-1) * keep).astype(dt)
     return (y_items * gflat[:, None]).reshape(T, k, -1).sum(axis=1)
 

@@ -165,6 +165,80 @@ def run_encoder(params: Params, frames: jax.Array, cfg) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# Stage API — the attention/expert split the disaggregated executor places on
+# separate device pools (Janus §3.1).  The monolithic paths below are plain
+# compositions of these two stages, so pool-mode and mono execution share the
+# exact op sequence (bit-identical logits between executors).
+# ---------------------------------------------------------------------------
+
+
+def attention_stage(lp, x, kv, cache_index, cfg, window=None, enc_out=None):
+    """Attention half of one decode layer: ln1 → self-attention (cache write)
+    → residual [→ cross-attention] → ln2.
+
+    ``kv`` is a dict with keys ``k``/``v`` (plus ``k_scale``/``v_scale`` when
+    ``cfg.kv_quant``) holding this layer's cache.  Returns
+    ``(x_resid, h_ffn, new_kv)``: the post-attention residual stream, the
+    normalised FFN input to hand to :func:`moe_stage`, and the updated cache.
+    """
+    h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+    if cfg.kv_quant:
+        h, ck, cv, ks, vs = attn_mod.attention_decode(
+            lp["attn"], h, kv["k"], kv["v"], cache_index, cfg,
+            window=window, k_scale=kv["k_scale"], v_scale=kv["v_scale"],
+        )
+        new_kv = {"k": ck, "v": cv, "k_scale": ks, "v_scale": vs}
+    else:
+        h, ck, cv = attn_mod.attention_decode(
+            lp["attn"], h, kv["k"], kv["v"], cache_index, cfg, window=window
+        )
+        new_kv = {"k": ck, "v": cv}
+    x = x + h
+    if enc_out is not None:
+        hx = rmsnorm(lp["ln_x"], x, cfg.norm_eps)
+        x = x + attn_mod.attention_cross(lp["xattn"], hx, enc_out, cfg)
+    h2 = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+    return x, h2, new_kv
+
+
+def attention_stage_full(lp, x, cfg, positions, window=None, enc_out=None, return_kv=False):
+    """Full-sequence analogue of :func:`attention_stage` (training/prefill).
+
+    Returns ``(x_resid, h_ffn, kv_or_None)``."""
+    h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+    if return_kv:
+        h, kv = attn_mod.attention_full(
+            lp["attn"], h, cfg, positions=positions, window=window, return_kv=True
+        )
+    else:
+        h = attn_mod.attention_full(lp["attn"], h, cfg, positions=positions, window=window)
+        kv = None
+    x = x + h
+    if enc_out is not None:
+        hx = rmsnorm(lp["ln_x"], x, cfg.norm_eps)
+        x = x + attn_mod.attention_cross(lp["xattn"], hx, enc_out, cfg)
+    h2 = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+    return x, h2, kv
+
+
+def moe_stage(lp, x, h, cfg, moe_ctx=None, with_aux=False):
+    """Expert half of one layer: MoE (or dense) FFN on the normalised input
+    ``h``, added onto the residual stream ``x``.
+
+    Works for both decode ([b, 1, d]) and full-sequence ([b, s, d]) inputs —
+    the stage is position-independent, which is what lets the disaggregated
+    executor ship ``h`` across pools.
+    """
+    if "moe" in lp:
+        if with_aux:
+            y, aux = moe_mod.moe_layer(lp["moe"], h, cfg, with_aux=True, **(moe_ctx or {}))
+            return x + y, aux
+        return x + moe_mod.moe_layer(lp["moe"], h, cfg, **(moe_ctx or {}))
+    y = x + ffn_mod.ffn(lp["ffn"], h, cfg.ffn_activation)
+    return (y, {}) if with_aux else y
+
+
+# ---------------------------------------------------------------------------
 # Full-sequence decoder pass (training / prefill)
 # ---------------------------------------------------------------------------
 
@@ -179,37 +253,23 @@ def _layer_full(kind, lp, x, cfg, positions, shared_attn, enc_out, moe_ctx, coll
     cache = {}
     if kind in ("dense", "dense_local", "moe", "encdec"):
         window = cfg.sliding_window if kind == "dense_local" else None
-        h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
-        if collect:
-            h, kv = attn_mod.attention_full(
-                lp["attn"], h, cfg, positions=positions, window=window, return_kv=True
-            )
+        x, h2, kv = attention_stage_full(
+            lp, x, cfg, positions, window=window,
+            enc_out=enc_out if kind == "encdec" else None, return_kv=collect,
+        )
+        if kv is not None:
             cache["kv"] = kv
-        else:
-            h = attn_mod.attention_full(lp["attn"], h, cfg, positions=positions, window=window)
-        x = x + h
-        if kind == "encdec":
-            hx = rmsnorm(lp["ln_x"], x, cfg.norm_eps)
-            x = x + attn_mod.attention_cross(lp["xattn"], hx, enc_out, cfg)
-        h2 = rmsnorm(lp["ln2"], x, cfg.norm_eps)
         if kind == "moe":
-            y, moe_aux = moe_mod.moe_layer(lp["moe"], h2, cfg, with_aux=True, **(moe_ctx or {}))
+            x, moe_aux = moe_stage(lp, x, h2, cfg, moe_ctx, with_aux=True)
             aux.update({k: v for k, v in moe_aux.items() if k == "lb_loss"})
-            x = x + y
         else:
-            x = x + ffn_mod.ffn(lp["ffn"], h2, cfg.ffn_activation)
+            x = moe_stage(lp, x, h2, cfg)
     elif kind in ("ssm", "ssm_hybrid"):
         if kind == "ssm_hybrid":
-            h = rmsnorm(shared_attn["ln1"], x, cfg.norm_eps)
-            if collect:
-                h, kv = attn_mod.attention_full(
-                    shared_attn["attn"], h, cfg, positions=positions, return_kv=True
-                )
+            x, h2, kv = attention_stage_full(shared_attn, x, cfg, positions, return_kv=collect)
+            if kv is not None:
                 cache["kv"] = kv
-            else:
-                h = attn_mod.attention_full(shared_attn["attn"], h, cfg, positions=positions)
-            x = x + h
-            x = x + ffn_mod.ffn(shared_attn["ffn"], rmsnorm(shared_attn["ln2"], x, cfg.norm_eps), cfg.ffn_activation)
+            x = moe_stage(shared_attn, x, h2, cfg)
         y, state, conv_tail = ssm_mod.mamba_seq(lp["mamba"], rmsnorm(lp["ln1"], x, cfg.norm_eps), cfg)
         x = x + y
         if collect:
@@ -314,57 +374,49 @@ def decode_step(
             # functional per-period update of cache slice `name` at sub-index idx
             scanned[name] = scanned[name].at[idx].set(val)
 
-        def attn_dec(attn_p, h, suffix, i, window=None):
+        def kv_slice(suffix, i):
             kk, vk = f"kv_k{suffix}", f"kv_v{suffix}"
+            kv = {"k": scanned[kk][i], "v": scanned[vk][i]}
             if cfg.kv_quant:
-                h, ck, cv, ks, vs = attn_mod.attention_decode(
-                    attn_p, h, scanned[kk][i], scanned[vk][i], cache_index, cfg,
-                    window=window,
-                    k_scale=scanned[kk + "_scale"][i], v_scale=scanned[vk + "_scale"][i],
-                )
-                upd(kk + "_scale", i, ks)
-                upd(vk + "_scale", i, vs)
-            else:
-                h, ck, cv = attn_mod.attention_decode(
-                    attn_p, h, scanned[kk][i], scanned[vk][i], cache_index, cfg, window=window
-                )
-            upd(kk, i, ck)
-            upd(vk, i, cv)
-            return h
+                kv["k_scale"] = scanned[kk + "_scale"][i]
+                kv["v_scale"] = scanned[vk + "_scale"][i]
+            return kv
+
+        def kv_write(suffix, i, new_kv):
+            upd(f"kv_k{suffix}", i, new_kv["k"])
+            upd(f"kv_v{suffix}", i, new_kv["v"])
+            if cfg.kv_quant:
+                upd(f"kv_k{suffix}_scale", i, new_kv["k_scale"])
+                upd(f"kv_v{suffix}_scale", i, new_kv["v_scale"])
 
         for pos, kind in enumerate(dec_kinds):
             lp = scanned["blocks"][f"pos{pos}"]
             if kind in ("dense", "moe", "encdec"):
                 i = counters["full"]
                 counters["full"] += 1
-                h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
-                h = attn_dec(lp["attn"], h, "", i)
-                x = x + h
-                if kind == "encdec":
-                    hx = rmsnorm(lp["ln_x"], x, cfg.norm_eps)
-                    x = x + attn_mod.attention_cross(lp["xattn"], hx, enc_out, cfg)
-                h2 = rmsnorm(lp["ln2"], x, cfg.norm_eps)
-                if kind == "moe":
-                    x = x + moe_mod.moe_layer(lp["moe"], h2, cfg, **(moe_ctx or {}))
-                else:
-                    x = x + ffn_mod.ffn(lp["ffn"], h2, cfg.ffn_activation)
+                x, h2, new_kv = attention_stage(
+                    lp, x, kv_slice("", i), cache_index, cfg,
+                    enc_out=enc_out if kind == "encdec" else None,
+                )
+                kv_write("", i, new_kv)
+                x = moe_stage(lp, x, h2, cfg, moe_ctx if kind == "moe" else None)
             elif kind == "dense_local":
                 i = counters["local"]
                 counters["local"] += 1
-                h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
-                h = attn_dec(lp["attn"], h, "_local", i, window=cfg.sliding_window)
-                x = x + h
-                x = x + ffn_mod.ffn(lp["ffn"], rmsnorm(lp["ln2"], x, cfg.norm_eps), cfg.ffn_activation)
+                x, h2, new_kv = attention_stage(
+                    lp, x, kv_slice("_local", i), cache_index, cfg, window=cfg.sliding_window
+                )
+                kv_write("_local", i, new_kv)
+                x = moe_stage(lp, x, h2, cfg)
             elif kind in ("ssm", "ssm_hybrid"):
                 if kind == "ssm_hybrid":
                     j = counters["hybrid"]
                     counters["hybrid"] += 1
-                    h = rmsnorm(shared_attn["ln1"], x, cfg.norm_eps)
-                    h = attn_dec(shared_attn["attn"], h, "_hybrid", j)
-                    x = x + h
-                    x = x + ffn_mod.ffn(
-                        shared_attn["ffn"], rmsnorm(shared_attn["ln2"], x, cfg.norm_eps), cfg.ffn_activation
+                    x, h2, new_kv = attention_stage(
+                        shared_attn, x, kv_slice("_hybrid", j), cache_index, cfg
                     )
+                    kv_write("_hybrid", j, new_kv)
+                    x = moe_stage(shared_attn, x, h2, cfg)
                 i = counters["ssm"]
                 counters["ssm"] += 1
                 y, cc, cs = ssm_mod.mamba_step(

@@ -4,6 +4,11 @@ Wraps :class:`repro.core.scaling.SLOScaler` with a sliding-window demand
 estimator and applies decisions at a fixed interval (paper: 15 minutes),
 with hysteresis to avoid flapping.  Expert placement is re-derived from the
 recent routing trace at each reconfiguration (§3.5 "expert placement").
+
+A decision is no longer advisory: :meth:`AutoScaler.actuate` applies it to a
+live ``ServingEngine(executor="disagg")`` via ``engine.reconfigure`` —
+attention and MoE pool counts move independently mid-run, only the affected
+pool is re-lowered, and in-flight KV caches are preserved.
 """
 
 from __future__ import annotations
@@ -81,3 +86,26 @@ class AutoScaler:
     def replan_layout(self, trace: np.ndarray, n_e: int):
         cfg = self.scaler.model.cfg
         return build_layout(trace, cfg.num_experts, n_e, self.scaler.model.C)
+
+    # -- actuation --------------------------------------------------------------
+    def actuate(self, engine, now: float, trace: Optional[np.ndarray] = None) -> EvalResult:
+        """Decide and *apply*: reconfigure the engine's pools to the chosen
+        (n_a, n_e), replanning expert placement from the routing trace when
+        one is provided.  Only the pool whose count changed is re-lowered.
+        Requires a disagg engine (checked before any controller state
+        mutates) — use :meth:`decide` alone for advisory-only scaling."""
+        cur = getattr(engine, "disagg", None)
+        if cur is None:
+            raise ValueError(
+                "actuate requires ServingEngine(executor='disagg'); "
+                "use decide() for advisory-only scaling"
+            )
+        best = self.decide(now)
+        changed_e = best.n_e != len(cur.pools.moe_devices)
+        layout = (
+            self.replan_layout(trace, best.n_e)
+            if trace is not None and changed_e
+            else None
+        )
+        engine.reconfigure(n_attn=best.n_a, n_moe=best.n_e, layout=layout)
+        return best

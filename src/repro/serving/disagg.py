@@ -1,0 +1,622 @@
+"""Two-pool disaggregated decode execution — Janus §3.1–§3.3 made runnable.
+
+:class:`DisaggExecutor` drives one continuous-batching decode step across two
+real device pools:
+
+* the **attention pool** (``pools.attn_devices``) holds a full
+  attention-stack replica per device and a contiguous *batch shard* of the
+  in-flight KV caches; every layer's :func:`repro.models.transformer
+  .attention_stage` runs there;
+* the **MoE pool** (``pools.moe_devices``) holds only each device's expert
+  replica-slot weights (plus the replicated router — EGate gates on the MoE
+  side, §3.2); every layer's expert FFN runs there over *local slots only*,
+  with the AEBS schedule recomputed redundantly per device
+  (synchronisation-free, §3.4).
+
+The per-layer hand-off is an explicit transfer whose pattern (case-1 direct
+node-to-node vs case-2 pair + multicast) is chosen per step via
+:func:`repro.core.comm.adaptive_two_phase` and executed as the grouped
+``device_put`` schedule from :func:`repro.core.disagg.plan_exchange`.
+Per-step regime, per-fabric bytes and message counts are returned as
+telemetry and surfaced by ``ServingEngine.metrics()``.
+
+Numerics: the executor composes the exact op sequence of the monolithic
+``decode_step`` (stage split + item-level dispatch + attention-side
+combine), so sequential pool mode produces **bit-identical logits** to the
+monolithic engine.  Micro-batch ping-pong (``ping_pong=True``, m=2 —
+MegaScale-style overlap of attention(i) with MoE(i+1)) routes each
+micro-batch independently; it is bit-identical as well whenever expert
+capacity is ample (per-micro-batch packing can only *reduce* capacity
+drops).
+
+``reconfigure`` actuates a §3.5 scaling decision mid-run: only the pool
+whose count changed is re-lowered, and KV caches are re-sharded in place so
+in-flight requests continue undisturbed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aebs import ReplicaLayout, aebs_assign
+from repro.core.comm import TPU_V5E, CommConfig, HardwareSpec, adaptive_two_phase
+from repro.core.disagg import DevicePools, DisaggConfig, plan_exchange
+from repro.core.disagg import reconfigure as disagg_reconfigure
+from repro.models import model as model_mod
+from repro.models import moe as moe_mod
+from repro.models import transformer
+from repro.models.ffn import ffn
+
+_KV_KEYS = {"k": "kv_k", "v": "kv_v", "k_scale": "kv_k_scale", "v_scale": "kv_v_scale"}
+
+
+@dataclasses.dataclass
+class _Shard:
+    """One attention-pool batch shard (a micro-batch slice of one device)."""
+
+    dev_index: int  # index into pools.attn_devices
+    mb: int  # micro-batch id (0 in sequential mode)
+    lo: int  # global batch row range [lo, hi)
+    hi: int
+
+    @property
+    def rows(self) -> int:
+        return self.hi - self.lo
+
+
+def _shard_bounds(max_batch: int, n: int) -> List[Tuple[int, int]]:
+    sizes = [max_batch // n + (1 if i < max_batch % n else 0) for i in range(n)]
+    bounds, lo = [], 0
+    for s in sizes:
+        bounds.append((lo, lo + s))
+        lo += s
+    return bounds
+
+
+class DisaggExecutor:
+    """Placement + per-layer cross-pool exchange for one decode deployment."""
+
+    def __init__(
+        self,
+        cfg,
+        params,
+        pools: DevicePools,
+        layout: ReplicaLayout,
+        *,
+        max_batch: int,
+        cache_len: int,
+        scheduler: Callable = aebs_assign,
+        capacity: Optional[int] = None,
+        ping_pong: bool = False,
+        hw: HardwareSpec = TPU_V5E,
+        devices: Optional[Sequence[jax.Device]] = None,
+    ):
+        if not cfg.has_moe:
+            raise ValueError("disagg executor requires an MoE architecture")
+        period, n_periods = transformer.period_pattern(cfg)
+        if cfg.encoder_layers or cfg.frontend or any(
+            k not in ("dense", "moe") for k in period
+        ):
+            raise ValueError(
+                f"disagg executor supports attention+FFN stacks only, got {period}"
+            )
+        if not moe_mod.scheduler_is_single_replica(scheduler):
+            raise ValueError(
+                "disagg executor requires a single-active-replica scheduler "
+                "(AEBS/random) so replica slots carry exact expert semantics"
+            )
+        self.cfg = cfg
+        self.params = params
+        self.pools = pools
+        self.scheduler = scheduler
+        self.capacity = capacity
+        self.ping_pong = ping_pong
+        self.hw = hw
+        self.max_batch = max_batch
+        self.cache_len = cache_len
+        if devices is not None:
+            self._all_devices = list(devices)
+        else:
+            # reconfigure must re-split the same universe the pools came
+            # from: detect the standard front/back split of the global device
+            # list; anything else is a custom pool set — stay inside it.
+            universe = jax.devices()
+            combo = list(pools.attn_devices) + list(pools.moe_devices)
+            std = (
+                universe[: len(pools.attn_devices)]
+                + universe[len(universe) - len(pools.moe_devices) :]
+            )
+            self._all_devices = None if combo == std else combo
+        self.disagg_cfg = DisaggConfig(
+            len(pools.attn_devices), len(pools.moe_devices), layout
+        )
+        self.relower_log: List[Dict[str, bool]] = []
+
+        # layer enumeration: (period_index, pos, kind, kv cache layer index)
+        full_pos = [p for p, k in enumerate(period) if k in ("dense", "moe")]
+        rank = {p: r for r, p in enumerate(full_pos)}
+        self._layers = [
+            (per, pos, kind, per * len(full_pos) + rank[pos])
+            for per in range(n_periods)
+            for pos, kind in enumerate(period)
+        ]
+
+        self._build_moe_side(layout)
+        self._build_attn_side(len(pools.attn_devices), caches=None)
+        self._build_attn_jits()
+        self._build_moe_jits()
+
+    # ------------------------------------------------------------------
+    # placement
+    # ------------------------------------------------------------------
+    def _layer_param(self, per: int, pos: int):
+        return jax.tree.map(lambda a: a[per], self.params["blocks"][f"pos{pos}"])
+
+    def _build_attn_side(self, n_attn: int, caches) -> None:
+        """(Re-)place attention params and KV cache shards on ``n_attn``
+        devices.  ``caches`` is the stacked engine-format cache dict to
+        re-shard (zeros when None)."""
+        cfg = self.cfg
+        if caches is None:
+            caches = model_mod.init_decode_caches(cfg, self.max_batch, self.cache_len)
+
+        pools = self.pools
+        bounds = _shard_bounds(self.max_batch, n_attn)
+        if self.ping_pong and any(hi - lo < 2 for lo, hi in bounds):
+            raise ValueError(
+                f"ping_pong (m=2) needs ≥2 batch rows per attention device "
+                f"(max_batch={self.max_batch}, n_attn={n_attn})"
+            )
+        self.shards: List[_Shard] = []
+        for i, (lo, hi) in enumerate(bounds):
+            if self.ping_pong:
+                mid = lo + (hi - lo) // 2
+                self.shards.append(_Shard(i, 0, lo, mid))
+                self.shards.append(_Shard(i, 1, mid, hi))
+            else:
+                self.shards.append(_Shard(i, 0, lo, hi))
+        self.n_micro = 1 + int(any(s.mb == 1 for s in self.shards))
+
+        # attention-side parameters, replicated per pool device
+        attn_layers = []
+        shared_layers = []
+        for per, pos, kind, _ in self._layers:
+            lp = self._layer_param(per, pos)
+            alp = {k: lp[k] for k in ("ln1", "attn", "ln2")}
+            if kind == "dense":
+                alp["ffn"] = lp["ffn"]
+            attn_layers.append(alp)
+            shared_layers.append(
+                lp["moe"].get("shared") if kind == "moe" else None
+            )
+        tree = {
+            "embed": self.params["embed"],
+            "final_norm": self.params["final_norm"],
+            "layers": attn_layers,
+            "shared": shared_layers,
+        }
+        self._attn_params = [
+            jax.device_put(tree, dev) for dev in pools.attn_devices
+        ]
+
+        # KV cache shards: per shard, per kv-layer, the engine cache rows
+        self._kv: List[List[Dict[str, jax.Array]]] = []
+        n_kv_layers = len({c for *_x, c in self._layers})
+        for s in self.shards:
+            dev = pools.attn_devices[s.dev_index]
+            per_layer = []
+            for l in range(n_kv_layers):
+                per_layer.append(
+                    {
+                        short: jax.device_put(caches[name][l, s.lo : s.hi], dev)
+                        for short, name in _KV_KEYS.items()
+                        if name in caches
+                    }
+                )
+            self._kv.append(per_layer)
+
+        # exchange schedule (regime chosen per step; both plans precomputed)
+        self._plans = {r: plan_exchange(self.pools, r) for r in ("case1", "case2")}
+
+    def _build_moe_side(self, layout: ReplicaLayout) -> None:
+        cfg = self.cfg
+        if layout.num_instances != len(self.pools.moe_devices):
+            raise ValueError(
+                f"layout has {layout.num_instances} instances but pool has "
+                f"{len(self.pools.moe_devices)} MoE devices"
+            )
+        self.layout = layout
+        self.n_moe = layout.num_instances
+        self.C = layout.capacity
+        self.S_total = layout.total_slots
+        self.cap = self.capacity or moe_mod.default_capacity(
+            self.max_batch, cfg.top_k, self.S_total, cfg.capacity_factor
+        )
+        tables = layout.device_tables()
+        stx = np.asarray(layout.slot_to_expert)
+        self._moe_params = []
+        for g, dev in enumerate(self.pools.moe_devices):
+            local = np.maximum(stx[g], 0)
+            layers = []
+            for per, pos, kind, _ in self._layers:
+                if kind != "moe":
+                    layers.append(None)
+                    continue
+                mp = self._layer_param(per, pos)["moe"]
+                layers.append(
+                    {
+                        "router": mp["router"],
+                        "w": {
+                            k: jnp.take(mp[k], jnp.asarray(local), axis=0)
+                            for k in ("w_gate", "w_up", "w_down")
+                        },
+                    }
+                )
+            self._moe_params.append(
+                jax.device_put(
+                    {
+                        "layers": layers,
+                        "tables": tables,
+                        "lo": jnp.int32(g * self.C),
+                    },
+                    dev,
+                )
+            )
+
+    def _build_attn_jits(self) -> None:
+        """Attention-pool stage functions.  Closures depend only on ``cfg``;
+        a pool resize changes shard shapes, which jax re-traces under the
+        same jit (new entries in the executable cache) — the MoE-pool
+        executables are untouched."""
+        cfg = self.cfg
+
+        def embed_fn(emb, tokens):
+            x = emb[tokens]
+            return x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+
+        def attn_fn(lp, x, kv, positions):
+            return transformer.attention_stage(lp, x, kv, positions, cfg)
+
+        def dense_fn(lp, x, h2):
+            return transformer.moe_stage(lp, x, h2, cfg)
+
+        def head_fn(p, x):
+            return transformer.lm_head(
+                {"final_norm": p["final_norm"], "embed": p["embed"]}, x[:, 0, :], cfg
+            )
+
+        self._embed_jit = jax.jit(embed_fn)
+        self._attn_jit = jax.jit(attn_fn)
+        self._dense_jit = jax.jit(dense_fn)
+        self._head_jit = jax.jit(head_fn)
+
+    def _build_moe_jits(self) -> None:
+        """MoE-pool stage functions + the attention-side combine.  Closures
+        bake in the layout constants (n_e, C, cap), so these — and only
+        these — are re-lowered when the MoE pool or layout changes."""
+        cfg = self.cfg
+        scheduler = self.scheduler
+        n_moe, C, cap = self.n_moe, self.C, self.cap
+
+        def moe_fn(mp, tables, lo, h):
+            h2d = h.reshape(-1, h.shape[-1])
+            gates, eids, _ = moe_mod.route(mp["router"], h2d, cfg.top_k)
+            slot_ids, load, _ = scheduler(eids, tables, n_moe)
+            local = (slot_ids >= lo) & (slot_ids < lo + C)
+            buckets = jnp.where(local, slot_ids - lo, -1)
+            y_items, keep = moe_mod.grouped_dispatch_items(
+                h2d, buckets, C, cap, mp["w"], backend="einsum"
+            )
+            return y_items, keep, local.reshape(-1), gates, load
+
+        def combine_fn(x, h2, shared_p, parts, gates):
+            b = x.shape[0]
+            d = x.shape[-1]
+            dt = h2.dtype
+            I = b * cfg.top_k
+            y_items = jnp.zeros((I, d), dt)
+            keep = jnp.zeros((I,), bool)
+            for yg, kg, lg in parts:
+                y_items = jnp.where(lg[:, None], yg, y_items)
+                keep = jnp.where(lg, kg, keep)
+            gflat = (gates.reshape(-1) * keep).astype(dt)
+            y2d = (y_items * gflat[:, None]).reshape(b, cfg.top_k, -1).sum(axis=1)
+            if shared_p is not None:
+                y2d = y2d + ffn(shared_p, h2.reshape(b, d), "swiglu")
+            return x + y2d.reshape(b, 1, d)
+
+        self._moe_jit = jax.jit(moe_fn)
+        self._combine_jit = jax.jit(combine_fn)
+
+    # ------------------------------------------------------------------
+    # cache interop (engine format: stacked [L, b, S, ...])
+    # ------------------------------------------------------------------
+    def scatter_prefill(self, one_caches: Dict[str, jax.Array], slot: int) -> None:
+        """Write a single-request prefill cache (batch dim 1) into ``slot``."""
+        shard = next(s for s in self.shards if s.lo <= slot < s.hi)
+        si = self.shards.index(shard)
+        dev = self.pools.attn_devices[shard.dev_index]
+        local = slot - shard.lo
+        for l, layer_kv in enumerate(self._kv[si]):
+            for short, name in _KV_KEYS.items():
+                if short in layer_kv:
+                    row = jax.device_put(one_caches[name][l, 0], dev)
+                    layer_kv[short] = layer_kv[short].at[local].set(row)
+
+    def load_caches(self, caches: Dict[str, jax.Array]) -> None:
+        """Adopt an engine-format stacked cache dict (re-shards onto the pool)."""
+        self._build_attn_side(len(self.pools.attn_devices), caches=caches)
+
+    def export_caches(self) -> Dict[str, jax.Array]:
+        """Reassemble the engine-format stacked cache dict (global row order)."""
+        order = sorted(range(len(self.shards)), key=lambda i: self.shards[i].lo)
+        out: Dict[str, jax.Array] = {}
+        n_layers = len(self._kv[0])
+        for short, name in _KV_KEYS.items():
+            if short not in self._kv[0][0]:
+                continue
+            per_layer = []
+            for l in range(n_layers):
+                rows = [jax.device_put(self._kv[i][l][short], jax.devices()[0]) for i in order]
+                per_layer.append(jnp.concatenate(rows, axis=0))
+            out[name] = jnp.stack(per_layer)
+        return out
+
+    # ------------------------------------------------------------------
+    # reconfigure (§3.5): re-lower only the affected pool
+    # ------------------------------------------------------------------
+    def reconfigure(
+        self,
+        n_attn: Optional[int] = None,
+        n_moe: Optional[int] = None,
+        layout: Optional[ReplicaLayout] = None,
+    ) -> Dict[str, bool]:
+        cur_a = len(self.pools.attn_devices)
+        cur_e = len(self.pools.moe_devices)
+        n_attn = cur_a if n_attn is None else n_attn
+        n_moe = cur_e if n_moe is None else n_moe
+        relower = {
+            "attn": n_attn != cur_a,
+            "moe": n_moe != cur_e or layout is not None,
+        }
+        if not (relower["attn"] or relower["moe"]):
+            self.relower_log.append(relower)
+            return relower
+
+        caches = self.export_caches() if relower["attn"] else None
+        devs = self._all_devices
+        allow_reuse = len(devs or jax.devices()) < n_attn + n_moe
+        self.pools = DevicePools.split(
+            n_attn, n_moe, devs, node_size=self.pools.node_size, allow_reuse=allow_reuse
+        )
+        new_layout = layout or (
+            self.layout
+            if n_moe == cur_e
+            else ReplicaLayout.round_robin(self.cfg.num_experts, n_moe, self.C)
+        )
+        if relower["moe"]:
+            self._build_moe_side(new_layout)
+            self._build_moe_jits()  # layout constants changed → re-lower MoE stages
+        if relower["attn"]:
+            # in-flight KV caches are preserved: re-shard the exported rows;
+            # attention jits re-trace for the new shard shapes on first use
+            self._build_attn_side(n_attn, caches=caches)
+        else:
+            # MoE-only change still needs fresh exchange plans (pool changed)
+            self._plans = {r: plan_exchange(self.pools, r) for r in ("case1", "case2")}
+        self.disagg_cfg = disagg_reconfigure(self.disagg_cfg, n_attn, n_moe, new_layout)
+        self.relower_log.append(relower)
+        return relower
+
+    # ------------------------------------------------------------------
+    # the exchange: realised two-phase transfer
+    # ------------------------------------------------------------------
+    def _dev_of(self, addr: Tuple[str, int]) -> jax.Device:
+        pool, idx = addr
+        return (self.pools.attn_devices if pool == "attn" else self.pools.moe_devices)[idx]
+
+    def _run_exchange(self, h2s: Dict[int, jax.Array], regime: str, tel: Dict) -> List[jax.Array]:
+        """Land the concatenation of all shards' ``h2`` on every MoE device
+        following the per-regime ``device_put`` schedule.  ``h2s`` maps
+        attention-device index → this micro-batch's activation slice."""
+        chunks, steps = self._plans[regime]
+        have: Dict[Tuple[int, Tuple[str, int]], jax.Array] = {}
+        node_payload: Dict[Tuple[int, ...], jax.Array] = {}
+        for cid, ch in enumerate(chunks):
+            leader = ("attn", ch.members[0])
+            if ch.members not in node_payload:
+                parts = [jax.device_put(h2s[i], self._dev_of(leader)) for i in ch.members]
+                node_payload[ch.members] = (
+                    parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
+                )
+            payload = node_payload[ch.members]
+            if ch.n_subs > 1:  # case-2 pair split: ≈ total/pairs rows per chunk
+                payload = jnp.array_split(payload, ch.n_subs, axis=0)[ch.sub]
+            have[(cid, leader)] = payload
+        for st in steps:
+            if st.phase == 1:
+                tel["bytes_fast"] += h2s[st.src[1]].nbytes
+                tel["msgs_fast"] += 1
+                continue
+            arr = have[(st.chunk, st.src)]
+            have[(st.chunk, st.dst)] = jax.device_put(arr, self._dev_of(st.dst))
+            tel[f"bytes_{st.fabric}"] += arr.nbytes
+            tel[f"msgs_{st.fabric}"] += 1
+        outs = []
+        for g in range(len(self.pools.moe_devices)):
+            got = [have[(cid, ("moe", g))] for cid in range(len(chunks))]
+            outs.append(got[0] if len(got) == 1 else jnp.concatenate(got, axis=0))
+        return outs
+
+    # ------------------------------------------------------------------
+    # decode
+    # ------------------------------------------------------------------
+    def decode_step(
+        self, tokens, positions, collect_stage_times: bool = False
+    ) -> Tuple[jax.Array, Dict]:
+        """One batched decode step.  Returns (logits [b, vocab], telemetry)."""
+        cfg = self.cfg
+        pools = self.pools
+        dtype_bytes = jnp.dtype(jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32).itemsize
+        c = CommConfig(
+            n_attn=len(pools.attn_devices),
+            n_moe=self.n_moe,
+            bytes_per_token=cfg.d_model * dtype_bytes,
+            batch=self.max_batch,
+            hw=dataclasses.replace(self.hw, devices_per_node=max(1, pools.node_size)),
+        )
+        t_pred, regime = adaptive_two_phase(c)
+        tel: Dict = {
+            "regime": regime,
+            "t_comm_pred": t_pred,
+            "bytes_slow": 0,
+            "bytes_fast": 0,
+            "msgs_slow": 0,
+            "msgs_fast": 0,
+        }
+        times: Dict[str, float] = {"attn": 0.0, "exchange": 0.0, "moe": 0.0, "combine": 0.0}
+
+        def _tick(key, arrs, t0):
+            if collect_stage_times:
+                jax.block_until_ready(arrs)
+                times[key] += time.perf_counter() - t0
+            return time.perf_counter()
+
+        # shard inputs + embed (attention pool)
+        xs: List[jax.Array] = []
+        poss: List[jax.Array] = []
+        for si, s in enumerate(self.shards):
+            dev = pools.attn_devices[s.dev_index]
+            tok = jax.device_put(jnp.asarray(tokens)[s.lo : s.hi], dev)
+            pos = jax.device_put(jnp.asarray(positions)[s.lo : s.hi], dev)
+            poss.append(pos)
+            xs.append(self._embed_jit(self._attn_params[s.dev_index]["embed"], tok))
+
+        mbs = [
+            [si for si, s in enumerate(self.shards) if s.mb == m]
+            for m in range(self.n_micro)
+        ]
+        # per-micro-batch item offsets (token order = shard order within the mb)
+        offs = []
+        for group in mbs:
+            o, acc = {}, 0
+            for si in group:
+                o[si] = acc
+                acc += self.shards[si].rows
+            offs.append((o, acc))
+
+        amax_parts: List[jax.Array] = []
+        for li, (per, pos_idx, kind, cidx) in enumerate(self._layers):
+            h2s_all: List[Optional[jax.Array]] = [None] * len(self.shards)
+
+            def attn_mb(group, li=li, cidx=cidx):
+                t0 = time.perf_counter()
+                for si in group:
+                    s = self.shards[si]
+                    lp = self._attn_params[s.dev_index]["layers"][li]
+                    x, h2, new_kv = self._attn_jit(lp, xs[si], self._kv[si][cidx], poss[si])
+                    xs[si], h2s_all[si] = x, h2
+                    self._kv[si][cidx] = new_kv
+                _tick("attn", [xs[si] for si in group], t0)
+
+            if kind == "dense":
+                for group in mbs:
+                    attn_mb(group)
+                    for si in group:
+                        lp = self._attn_params[self.shards[si].dev_index]["layers"][li]
+                        xs[si] = self._dense_jit(lp, xs[si], h2s_all[si])
+                continue
+
+            # MoE layer: per micro-batch attention → exchange → expert → combine,
+            # dispatched in ping-pong order: micro-batch m's expert stage is in
+            # flight (MoE pool) while m+1's attention runs (attention pool), and
+            # m's combine (attention pool) overlaps m+1's expert stage (§6 /
+            # MegaScale micro-batch pipelining).
+            pending: List[Tuple[int, List[int], List]] = []
+            for m, group in enumerate(mbs):
+                attn_mb(group)
+                t0 = time.perf_counter()
+                h2s = {self.shards[si].dev_index: h2s_all[si] for si in group}
+                h_on_moe = self._run_exchange(h2s, regime, tel)
+                t0 = _tick("exchange", h_on_moe, t0)
+                res = [
+                    self._moe_jit(
+                        self._moe_params[g]["layers"][li],
+                        self._moe_params[g]["tables"],
+                        self._moe_params[g]["lo"],
+                        h_on_moe[g],
+                    )
+                    for g in range(self.n_moe)
+                ]
+                _tick("moe", [r[0] for r in res], t0)
+                if pending:
+                    self._combine_mb(
+                        *pending.pop(0), xs, h2s_all, offs, li, tel, times,
+                        collect_stage_times, amax_parts,
+                    )
+                pending.append((m, group, res))
+            while pending:
+                self._combine_mb(
+                    *pending.pop(0), xs, h2s_all, offs, li, tel, times,
+                    collect_stage_times, amax_parts,
+                )
+
+        t0 = time.perf_counter()
+        logit_shards = {}
+        for si, s in enumerate(self.shards):
+            p = self._attn_params[s.dev_index]
+            logit_shards[s.lo] = self._head_jit(
+                {"final_norm": p["final_norm"], "embed": p["embed"]}, xs[si]
+            )
+        logits = jnp.concatenate(
+            [
+                jax.device_put(logit_shards[lo], jax.devices()[0])
+                for lo in sorted(logit_shards)
+            ],
+            axis=0,
+        )
+        if collect_stage_times:
+            logits.block_until_ready()
+            times["head"] = time.perf_counter() - t0
+            tel["stage_times"] = times
+        tel["a_max"] = int(np.max([np.asarray(a) for a in amax_parts])) if amax_parts else 0
+        tel["bytes_total"] = tel["bytes_slow"] + tel["bytes_fast"]
+        return logits, tel
+
+    def _combine_mb(
+        self, m, group, res, xs, h2s_all, offs, li, tel, times, collect, amax_parts
+    ) -> None:
+        """Ship expert partials back to the owning attention shards and run
+        the gate-combine there (mono-identical op order)."""
+        t0 = time.perf_counter()
+        k = self.cfg.top_k
+        off, _total = offs[m]
+        amax_parts.append(jnp.max(res[0][4]))  # load from instance 0 (redundant copies agree)
+        for si in group:
+            s = self.shards[si]
+            dev = self.pools.attn_devices[s.dev_index]
+            r0, r1 = off[si], off[si] + s.rows
+            parts = []
+            for y_items, keep, local, _gates, _load in res:
+                part = (
+                    jax.device_put(y_items[r0 * k : r1 * k], dev),
+                    jax.device_put(keep[r0 * k : r1 * k], dev),
+                    jax.device_put(local[r0 * k : r1 * k], dev),
+                )
+                tel["bytes_slow"] += sum(a.nbytes for a in part)
+                tel["msgs_slow"] += 1
+                parts.append(part)
+            gates = jax.device_put(res[0][3][r0:r1], dev)
+            tel["bytes_slow"] += gates.nbytes
+            tel["msgs_slow"] += 1
+            shared = self._attn_params[s.dev_index]["shared"][li]
+            xs[si] = self._combine_jit(xs[si], h2s_all[si], shared, parts, gates)
+        if collect:
+            jax.block_until_ready([xs[si] for si in group])
+            times["combine"] += time.perf_counter() - t0

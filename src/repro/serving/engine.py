@@ -4,19 +4,28 @@ The engine serves a stream of requests against one model deployment:
 
   * admission: waiting requests are prefetched into free batch slots
     (per-request prefill, scattered into the batched caches);
-  * decode: one batched ``decode_step`` per iteration with *per-slot*
-    positions (continuous batching — slots join/leave independently);
+  * decode: one batched decode per iteration with *per-slot* positions
+    (continuous batching — slots join/leave independently), through one of
+    two executors sharing identical semantics and telemetry:
+
+      - ``executor="mono"``: the jitted monolithic ``decode_step`` on the
+        default device (single-instance baseline);
+      - ``executor="disagg"``: the two-pool
+        :class:`repro.serving.disagg.DisaggExecutor` — attention stages on
+        ``n_attn`` pool devices, expert stages on the MoE pool, with the
+        adaptive two-phase exchange realised per layer and per-step
+        regime / transfer-byte / ``a_max`` telemetry recorded;
+
   * MoE architectures route through the scheduled slot path: routing →
     AEBS (or a baseline scheduler) → replica-slot dispatch, with per-layer
     ``a_max`` telemetry surfaced to the controller.  Dispatch defaults to
     the sort-based grouped path (``repro.models.moe.grouped_dispatch_ffn``)
     — no per-step ``[S_total, d, f]`` weight materialisation;
   * timing: wall-clock by default, or a pluggable ``step_time_fn`` driven by
-    the analytic performance model (used in tests and the simulator).
-
-This is the pool-agnostic core; device placement (attention pool vs MoE
-pool) is applied by the caller (see examples/serve_disaggregated.py and the
-SPMD serve_step in repro/launch/steps.py).
+    the analytic performance model (used in tests and the simulator);
+  * scaling: :meth:`ServingEngine.reconfigure` actuates a controller
+    decision mid-run (§3.5) — pool counts move independently, in-flight KV
+    caches are preserved.
 """
 
 from __future__ import annotations
@@ -30,6 +39,7 @@ import numpy as np
 
 from repro.core.aebs import ReplicaLayout, aebs_assign
 from repro.core import baselines
+from repro.core.disagg import DevicePools
 from repro.kernels.aebs.ops import aebs_schedule
 from repro.models import model as model_mod
 from repro.models import transformer
@@ -59,6 +69,11 @@ class ServingEngine:
         dispatch: str = "grouped",  # grouped = slot-indirect hot path (no weight copy)
         step_time_fn: Optional[Callable[[int], float]] = None,
         extra_builder: Optional[Callable[[int], Dict]] = None,
+        executor: str = "mono",  # mono | disagg
+        n_attn: int = 1,
+        pools: Optional[DevicePools] = None,
+        node_size: int = 1,
+        ping_pong: bool = False,
     ):
         self.cfg = cfg
         self.params = params
@@ -69,10 +84,12 @@ class ServingEngine:
         self.scheduler_name = scheduler
         self.step_time_fn = step_time_fn
         self.extra_builder = extra_builder
-        self.caches = model_mod.init_decode_caches(cfg, max_batch, cache_len)
+        self.executor_name = executor
         self.tokens = jnp.zeros((max_batch, 1), jnp.int32)
         self.clock = 0.0
         self.amax_log: List[int] = []
+        self.regime_log: List[str] = []
+        self.transfer_bytes_log: List[int] = []
         self.completed: List[Request] = []
 
         moe_ctx = None
@@ -86,6 +103,29 @@ class ServingEngine:
                 capacity=capacity_tokens,
             )
         self._moe_ctx = moe_ctx
+
+        self.disagg: Optional["DisaggExecutor"] = None
+        if executor == "disagg":
+            from repro.serving.disagg import DisaggExecutor
+
+            if layout is None or scheduler == "none":
+                raise ValueError("executor='disagg' needs a replica layout and scheduler")
+            if pools is None:
+                pools = DevicePools.split(
+                    n_attn, layout.num_instances, node_size=node_size,
+                    allow_reuse=len(jax.devices()) < n_attn + layout.num_instances,
+                )
+            self.disagg = DisaggExecutor(
+                cfg, params, pools, layout,
+                max_batch=max_batch, cache_len=cache_len,
+                scheduler=SCHEDULERS[scheduler], capacity=capacity_tokens,
+                ping_pong=ping_pong,
+            )
+            self.caches = None  # cache residency moves to the executor's pool
+        elif executor == "mono":
+            self.caches = model_mod.init_decode_caches(cfg, max_batch, cache_len)
+        else:
+            raise ValueError(f"unknown executor: {executor}")
 
         def _decode(params, tokens, caches, positions):
             extra = {"moe_ctx": moe_ctx} if moe_ctx else None
@@ -111,7 +151,10 @@ class ServingEngine:
         logits, one_caches = self._prefill_jit(self.params, toks, extra)
         logits.block_until_ready()
         dt = time.perf_counter() - t0
-        self.caches = scatter_prefill_caches(self.caches, one_caches, slot)
+        if self.disagg is not None:
+            self.disagg.scatter_prefill(one_caches, slot)
+        else:
+            self.caches = scatter_prefill_caches(self.caches, one_caches, slot)
         first = int(np.argmax(np.asarray(logits[0])))
         self.tokens = self.tokens.at[slot, 0].set(first)
         self.clock += dt if self.step_time_fn is None else 0.0
@@ -122,8 +165,15 @@ class ServingEngine:
     def _decode_iteration(self) -> None:
         positions = self.slots.positions_device()
         t0 = time.perf_counter()
-        logits, self.caches = self._decode_jit(self.params, self.tokens, self.caches, positions)
-        logits.block_until_ready()
+        if self.disagg is not None:
+            logits, tel = self.disagg.decode_step(self.tokens, positions)
+            logits.block_until_ready()
+            self.regime_log.append(tel["regime"])
+            self.transfer_bytes_log.append(tel["bytes_total"])
+            self.amax_log.append(tel["a_max"])
+        else:
+            logits, self.caches = self._decode_jit(self.params, self.tokens, self.caches, positions)
+            logits.block_until_ready()
         wall = time.perf_counter() - t0
         self.clock += self.step_time_fn(self.slots.num_active) if self.step_time_fn else wall
 
@@ -159,20 +209,51 @@ class ServingEngine:
         return self.metrics()
 
     # ------------------------------------------------------------------
+    def reconfigure(
+        self,
+        n_attn: Optional[int] = None,
+        n_moe: Optional[int] = None,
+        layout: Optional[ReplicaLayout] = None,
+    ) -> Dict[str, bool]:
+        """Actuate a scaling decision mid-run (§3.5): only the pool whose
+        count changed is re-lowered; in-flight KV caches are preserved.
+        Disagg executor only — the monolithic engine re-lowers wholesale."""
+        if self.disagg is not None:
+            relower = self.disagg.reconfigure(n_attn=n_attn, n_moe=n_moe, layout=layout)
+            self.layout = self.disagg.layout
+            return relower
+        raise NotImplementedError(
+            "mid-run reconfigure requires executor='disagg' (the monolithic "
+            "engine re-lowers wholesale — rebuild the engine instead)"
+        )
+
+    # ------------------------------------------------------------------
     def metrics(self) -> Dict:
         done = self.completed
-        total_tokens = sum(r.generated for r in done)
+        out: Dict = {"completed": len(done), "tokens": sum(r.generated for r in done)}
+        # disaggregated-exchange telemetry (satellite of amax_log): which
+        # two-phase regime served each step, and the bytes it moved
+        if self.regime_log:
+            out["regime_counts"] = {
+                r: self.regime_log.count(r) for r in sorted(set(self.regime_log))
+            }
+            out["transfer_bytes_total"] = int(sum(self.transfer_bytes_log))
+            out["transfer_bytes_per_step"] = float(
+                np.mean(self.transfer_bytes_log)
+            )
+        if self.amax_log:
+            out["amax_mean"] = float(np.mean(self.amax_log))
+            out["amax_max"] = int(np.max(self.amax_log))
         if not done:
-            return {"completed": 0, "tokens": 0}
+            return out
         gaps = np.concatenate(
             [np.diff(r.token_times) for r in done if len(r.token_times) > 1]
         )
         span = max(r.finished for r in done) - min(r.arrival for r in done)
-        return {
-            "completed": len(done),
-            "tokens": total_tokens,
-            "throughput_tok_s": total_tokens / max(span, 1e-9),
-            "tpot_mean": float(gaps.mean()) if len(gaps) else 0.0,
-            "tpot_p99": float(np.percentile(gaps, 99)) if len(gaps) else 0.0,
-            "clock": self.clock,
-        }
+        out.update(
+            throughput_tok_s=out["tokens"] / max(span, 1e-9),
+            tpot_mean=float(gaps.mean()) if len(gaps) else 0.0,
+            tpot_p99=float(np.percentile(gaps, 99)) if len(gaps) else 0.0,
+            clock=self.clock,
+        )
+        return out

@@ -2,6 +2,8 @@
 
 import pytest
 
+from _hypo import given, settings, st
+
 from repro.core.comm import (
     H100,
     TPU_V5E,
@@ -61,3 +63,51 @@ def test_tpu_constants_sane():
     assert TPU_V5E.peak_flops == 197e12
     assert TPU_V5E.hbm_bw == 819e9
     assert H100.fast_bw > H100.slow_bw
+
+
+# ---------------------------------------------------------------------------
+# Property sweeps: regime selection never regresses
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def comm_case(draw, at_scale: bool = False):
+    hw = draw(st.sampled_from([H100, TPU_V5E]))
+    n_lo = 2 * hw.devices_per_node if at_scale else 1
+    m = draw(st.integers(min_value=1, max_value=64))
+    n = draw(st.integers(min_value=n_lo, max_value=128))
+    batch = draw(st.integers(min_value=1, max_value=4096))
+    d = draw(st.integers(min_value=64, max_value=8192))
+    return CommConfig(n_attn=m, n_moe=n, bytes_per_token=2 * d, batch=batch, hw=hw)
+
+
+@given(comm_case())
+@settings(max_examples=120, deadline=None)
+def test_adaptive_is_min_of_cases_prop(c):
+    """adaptive_two_phase is exactly min(case1, case2), regime consistent."""
+    t, regime = adaptive_two_phase(c)
+    t1, t2 = two_phase_case1(c), two_phase_case2(c)
+    assert t == min(t1, t2)
+    assert regime == ("case1" if t1 <= t2 else "case2")
+    assert t > 0.0
+
+
+@given(comm_case(at_scale=True))
+@settings(max_examples=120, deadline=None)
+def test_adaptive_never_regresses_vs_one_phase_prop(c):
+    """With ≥2 destination nodes, intra-node aggregation always pays:
+    adaptive_two_phase(c)[0] <= min(one_phase, case1, case2) — the §3.3
+    regression bound the strawman comparison benchmarks rely on."""
+    t, _ = adaptive_two_phase(c)
+    assert t <= min(one_phase_cost(c), two_phase_case1(c), two_phase_case2(c)) * (1 + 1e-12)
+
+
+@given(comm_case(), st.integers(min_value=2, max_value=8))
+@settings(max_examples=60, deadline=None)
+def test_cost_monotone_in_batch_prop(c, factor):
+    """More tokens never get cheaper to move (both regimes)."""
+    import dataclasses
+
+    bigger = dataclasses.replace(c, batch=c.batch * factor)
+    assert adaptive_two_phase(bigger)[0] >= adaptive_two_phase(c)[0]
+    assert one_phase_cost(bigger) >= one_phase_cost(c)

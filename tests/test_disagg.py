@@ -1,0 +1,382 @@
+"""Two-pool disaggregated execution: consistency, exchange patterns,
+reconfiguration, telemetry.
+
+In-process tests run on the default single CPU device with degenerate
+(device-reusing) pools — the full stage/exchange/combine code path executes,
+transfers are local puts.  The real ≥2+2 multi-device end-to-end check runs
+in a subprocess with forced host devices (same contract as test_moe_ep).
+"""
+
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.aebs import ReplicaLayout
+from repro.core.disagg import DevicePools, plan_exchange
+from repro.models import model as model_mod
+from repro.serving.disagg import DisaggExecutor
+from repro.serving.engine import ServingEngine
+from repro.serving.request import WorkloadSpec, sample_requests
+from repro.serving.trace import poisson_arrivals
+
+
+@pytest.fixture(scope="module")
+def dsv2_setup():
+    cfg = get_config("dsv2-lite-reduced")
+    params = model_mod.init_params(cfg, 0)
+    layout = ReplicaLayout.round_robin(cfg.num_experts, 2, 3)
+    return cfg, params, layout
+
+
+def _requests(cfg, n=6, seed=3):
+    spec = WorkloadSpec(mean_input=6, mean_output=10, vocab_size=cfg.vocab_size,
+                        max_input=16, max_output=16, seed=seed)
+    arr = poisson_arrivals(100.0, n / 100.0, seed=seed)[:n]
+    if len(arr) < n:
+        arr = np.linspace(0, 0.1, n)
+    return sample_requests(spec, arr, with_prompts=True)
+
+
+def _step_fixture(cfg, params, B=6, S=16, cache_len=32):
+    tokens = jax.random.randint(jax.random.PRNGKey(0), (B, S + 1), 0, cfg.vocab_size)
+    _, caches = model_mod.prefill(params, tokens[:, :S], cfg, cache_len=cache_len)
+    positions = jnp.full((B,), S, jnp.int32)
+    return tokens[:, S:], caches, positions
+
+
+def _executor(cfg, params, layout, n_attn, *, B=6, cache_len=32, **kw):
+    pools = DevicePools.split(n_attn, layout.num_instances, allow_reuse=True)
+    return DisaggExecutor(cfg, params, pools, layout,
+                          max_batch=B, cache_len=cache_len, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Executor-level consistency
+# ---------------------------------------------------------------------------
+
+
+def test_disagg_pool_shapes_bit_identical(dsv2_setup):
+    """Pool sharding, the two-phase exchange, and micro-batch ping-pong are
+    numerically transparent: every pool shape produces bit-identical logits."""
+    cfg, params, layout = dsv2_setup
+    tok, caches, positions = _step_fixture(cfg, params)
+    ref = None
+    for n_attn, pp in [(1, False), (2, False), (3, False), (2, True)]:
+        ex = _executor(cfg, params, layout, n_attn, ping_pong=pp, capacity=64)
+        ex.load_caches(caches)
+        logits, tel = ex.decode_step(tok, positions)
+        got = np.asarray(logits)
+        if ref is None:
+            ref = got
+        else:
+            np.testing.assert_array_equal(got, ref, err_msg=f"n_attn={n_attn} pp={pp}")
+        assert tel["regime"] in ("case1", "case2")
+        assert tel["bytes_total"] > 0 and tel["a_max"] >= 1
+
+
+def test_disagg_matches_mono_decode_step(dsv2_setup):
+    """Disagg logits match the monolithic jitted decode_step to jit-boundary
+    rounding (same argmax everywhere), and the updated KV caches are
+    bit-identical — the two executors share op-for-op semantics."""
+    from repro.core.aebs import aebs_assign
+
+    cfg, params, layout = dsv2_setup
+    tok, caches, positions = _step_fixture(cfg, params)
+    moe_ctx = dict(dispatch="grouped", layout_tables=layout.device_tables(),
+                   slot_to_expert=jnp.asarray(layout.slot_to_expert.reshape(-1)),
+                   num_instances=layout.num_instances, scheduler=aebs_assign,
+                   capacity=64)
+    mono_logits, mono_caches = model_mod.decode_step(
+        params, tok, caches, positions, cfg, extra={"moe_ctx": moe_ctx})
+
+    ex = _executor(cfg, params, layout, 2, capacity=64)
+    ex.load_caches(caches)
+    logits, _ = ex.decode_step(tok, positions)
+    ml, dl = np.asarray(mono_logits), np.asarray(logits)
+    np.testing.assert_allclose(dl, ml, atol=0.05, rtol=0.02)
+    np.testing.assert_array_equal(np.argmax(dl, -1), np.argmax(ml, -1))
+    got = ex.export_caches()
+    for k in got:
+        np.testing.assert_array_equal(np.asarray(got[k]), np.asarray(mono_caches[k]))
+
+
+def test_reconfigure_preserves_caches_and_logits(dsv2_setup):
+    """§3.5 actuation: resizing either pool mid-run preserves the in-flight
+    KV caches bit-exactly and leaves the decode function unchanged."""
+    cfg, params, layout = dsv2_setup
+    tok, caches, positions = _step_fixture(cfg, params)
+    ex = _executor(cfg, params, layout, 2, capacity=64)
+    ex.load_caches(caches)
+    ref, _ = ex.decode_step(tok, positions)
+    before = {k: np.asarray(v) for k, v in ex.export_caches().items()}
+
+    rel = ex.reconfigure(n_attn=3)
+    assert rel == {"attn": True, "moe": False}
+    after = ex.export_caches()
+    for k in before:
+        np.testing.assert_array_equal(np.asarray(after[k]), before[k])
+    got, _ = ex.decode_step(tok, positions)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+    rel = ex.reconfigure(n_moe=4, layout=ReplicaLayout.round_robin(cfg.num_experts, 4, 2))
+    assert rel == {"attn": False, "moe": True}
+    got, _ = ex.decode_step(tok, positions)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+    assert ex.relower_log == [
+        {"attn": True, "moe": False},
+        {"attn": False, "moe": True},
+    ]
+
+
+def test_executor_validation(dsv2_setup):
+    cfg, params, layout = dsv2_setup
+    from repro.core import baselines
+
+    with pytest.raises(ValueError, match="single-active-replica"):
+        _executor(cfg, params, layout, 2, scheduler=baselines.token_hash_assign)
+    with pytest.raises(ValueError, match="ping_pong"):
+        _executor(cfg, params, layout, 4, B=6, ping_pong=True)  # <2 rows/device
+    ssm_cfg = get_config("falcon-mamba-7b-reduced")
+    with pytest.raises(ValueError):
+        ssm_params = model_mod.init_params(ssm_cfg, 0)
+        pools = DevicePools.split(1, 2, allow_reuse=True)
+        DisaggExecutor(ssm_cfg, ssm_params, pools, layout, max_batch=4, cache_len=32)
+
+
+# ---------------------------------------------------------------------------
+# Exchange plan structure
+# ---------------------------------------------------------------------------
+
+
+def test_plan_exchange_patterns():
+    pools = DevicePools.split(4, 4, devices=[jax.devices()[0]] * 8, node_size=2,
+                              allow_reuse=True)
+    for regime in ("case1", "case2"):
+        chunks, steps = plan_exchange(pools, regime)
+        assert [c.members for c in chunks] == [(0, 1), (2, 3)]
+        # every MoE device must end up holding every chunk
+        have = {(cid, ("attn", c.members[0])) for cid, c in enumerate(chunks)}
+        for st_ in steps:
+            if st_.phase == 1:
+                continue
+            assert (st_.chunk, st_.src) in have, (regime, st_)
+            have.add((st_.chunk, st_.dst))
+        for g in range(4):
+            for c in range(len(chunks)):
+                assert (c, ("moe", g)) in have, (regime, g, c)
+    # case-1: leader→every-moe-node (slow) = attn_nodes × moe_nodes messages
+    _, s1 = plan_exchange(pools, "case1")
+    assert sum(1 for s in s1 if s.fabric == "slow") == 2 * 2
+    # case-2: one slow message per pair
+    _, s2 = plan_exchange(pools, "case2")
+    assert sum(1 for s in s2 if s.fabric == "slow") == 2
+
+
+def test_plan_exchange_case2_splits_across_pairs():
+    """When attn_nodes < moe_nodes, case-2 must row-split each node payload
+    so every pair link carries ≈ total/pairs bytes (the two_phase_case2
+    assumption), not the whole payload over one slow link."""
+    pools = DevicePools.split(2, 8, devices=[jax.devices()[0]] * 10, node_size=2,
+                              allow_reuse=True)  # 1 attn node, 4 moe nodes
+    chunks, steps = plan_exchange(pools, "case2")
+    assert len(chunks) == 4 and all(c.n_subs == 4 for c in chunks)
+    assert [c.sub for c in chunks] == [0, 1, 2, 3]
+    slow = [s for s in steps if s.fabric == "slow"]
+    assert len(slow) == 4  # one slow message per pair
+    assert {s.dst for s in slow} == {("moe", 0), ("moe", 2), ("moe", 4), ("moe", 6)}
+
+
+def test_disagg_exchange_split_chunks_consistent(dsv2_setup):
+    """Case-2 sub-chunking (1 attention node feeding 2 MoE nodes) splits the
+    payload across pair links yet reassembles the full activation block, in
+    row order, on every MoE device."""
+    cfg, params, layout = dsv2_setup
+    ex = _executor(cfg, params, layout, 1, capacity=64)  # 1 attn dev, 2 moe nodes
+    h = jnp.arange(6 * 1 * cfg.d_model, dtype=jnp.bfloat16).reshape(6, 1, cfg.d_model)
+    for regime in ("case1", "case2"):
+        tel = {"bytes_slow": 0, "bytes_fast": 0, "msgs_slow": 0, "msgs_fast": 0}
+        outs = ex._run_exchange({0: h}, regime, tel)
+        assert len(outs) == 2
+        for got in outs:
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(h))
+    # case-2 split: 2 pair messages, each ≈ half the payload on the wire
+    chunks, _ = plan_exchange(ex.pools, "case2")
+    assert len(chunks) == 2 and all(c.n_subs == 2 for c in chunks)
+
+
+def test_reconfigure_custom_pools_stays_in_universe(dsv2_setup):
+    """An executor built on a custom device subset reconfigures within that
+    subset — pool addresses never drift away from where weights live."""
+    cfg, params, layout = dsv2_setup
+    devs = [jax.devices()[0]] * 5
+    pools = DevicePools.split(2, 2, devices=devs[:4])
+    ex = DisaggExecutor(cfg, params, pools, layout, max_batch=6, cache_len=32,
+                        capacity=64)
+    tok, caches, positions = _step_fixture(cfg, params)
+    ex.load_caches(caches)
+    want, _ = ex.decode_step(tok, positions)
+    ex.reconfigure(n_attn=1)
+    assert len(ex.pools.attn_devices) == 1 and len(ex.pools.moe_devices) == 2
+    got, _ = ex.decode_step(tok, positions)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_pools_anchor_unaffected_side():
+    """Resizing one pool never relocates the other pool's devices (so
+    reconfigure really can leave the unaffected pool's weights in place)."""
+    devs = [jax.devices()[0]] * 8
+    a = DevicePools.split(2, 4, devices=devs)
+    b = DevicePools.split(3, 4, devices=devs)
+    assert [id(d) for d in a.moe_devices] == [id(d) for d in b.moe_devices]
+    c = DevicePools.split(2, 3, devices=devs)
+    assert [id(d) for d in a.attn_devices] == [id(d) for d in c.attn_devices]
+
+
+# ---------------------------------------------------------------------------
+# Engine-level: continuous batching, telemetry, reconfigure
+# ---------------------------------------------------------------------------
+
+
+def test_engine_disagg_matches_mono_tokens(dsv2_setup):
+    """executor='disagg' (with and without ping-pong) serves the same token
+    counts per request as the monolithic engine over a multi-request
+    continuous-batching run."""
+    cfg, params, layout = dsv2_setup
+    outs = {}
+    for name, kw in [
+        ("mono", dict(executor="mono")),
+        ("disagg", dict(executor="disagg", n_attn=2)),
+        ("disagg_pp", dict(executor="disagg", n_attn=2, ping_pong=True)),
+    ]:
+        eng = ServingEngine(cfg, params, max_batch=4, cache_len=64, layout=layout,
+                            scheduler="aebs", capacity_tokens=64, **kw)
+        m = eng.run(_requests(cfg, 5), max_steps=2000)
+        assert m["completed"] == 5
+        outs[name] = {r.rid: r.generated for r in eng.completed}
+        if name != "mono":
+            assert m["regime_counts"] and m["transfer_bytes_total"] > 0
+            assert m["amax_max"] >= 1
+            assert set(m["regime_counts"]) <= {"case1", "case2"}
+            assert eng.transfer_bytes_log and len(eng.regime_log) == len(eng.amax_log)
+    assert outs["mono"] == outs["disagg"] == outs["disagg_pp"]
+
+
+def test_engine_reconfigure_mid_run(dsv2_setup):
+    """Scaling the pools between run() segments keeps in-flight state sane
+    and the served tokens identical to an undisturbed engine."""
+    cfg, params, layout = dsv2_setup
+    reqs_a, reqs_b = _requests(cfg, 3, seed=1), _requests(cfg, 3, seed=2)
+    for r in reqs_b:
+        r.rid += 100
+
+    ref = ServingEngine(cfg, params, max_batch=3, cache_len=64, layout=layout,
+                        scheduler="aebs", capacity_tokens=64,
+                        executor="disagg", n_attn=2)
+    ref.run(list(reqs_a), max_steps=2000)
+    ref.run(list(reqs_b), max_steps=2000)
+    want = {r.rid: r.generated for r in ref.completed}
+
+    eng = ServingEngine(cfg, params, max_batch=3, cache_len=64, layout=layout,
+                        scheduler="aebs", capacity_tokens=64,
+                        executor="disagg", n_attn=2)
+    eng.run(list(_requests(cfg, 3, seed=1)), max_steps=2000)
+    rel = eng.reconfigure(n_attn=3)
+    assert rel["attn"] and not rel["moe"]
+    reqs_b2 = _requests(cfg, 3, seed=2)
+    for r in reqs_b2:
+        r.rid += 100
+    m = eng.run(reqs_b2, max_steps=2000)
+    assert m["completed"] == 6
+    assert {r.rid: r.generated for r in eng.completed} == want
+
+
+def test_controller_actuates_reconfigure(dsv2_setup):
+    """AutoScaler.actuate applies its (n_a, n_e) decision to a live disagg
+    engine — the scaling loop is closed, not advisory."""
+    from repro.core.scaling import EvalResult, PerfModel
+    from repro.serving.controller import AutoScaler
+
+    cfg, params, layout = dsv2_setup
+    eng = ServingEngine(cfg, params, max_batch=4, cache_len=64, layout=layout,
+                        scheduler="aebs", capacity_tokens=64,
+                        executor="disagg", n_attn=2)
+    eng.run(_requests(cfg, 3), max_steps=2000)
+
+    ctrl = AutoScaler(PerfModel(cfg, slots_per_instance=3, s_ctx=64), slo=0.2)
+    decision = EvalResult(n_a=3, n_e=2, batch=4, tpot=0.1, t_attn=0, t_moe=0,
+                          t_comm=0, a_max=1, tpg=1.0, feasible=True)
+    ctrl.scaler.scale = lambda lam, slo: decision  # pin the decision
+    best = ctrl.actuate(eng, now=0.0)
+    assert (best.n_a, best.n_e) == (3, 2)
+    assert len(eng.disagg.pools.attn_devices) == 3
+    assert eng.disagg.relower_log[-1] == {"attn": True, "moe": False}
+    m = eng.run(_requests(cfg, 2, seed=9), max_steps=2000)
+    assert m["completed"] == 5
+
+
+def test_engine_mono_rejects_reconfigure(dsv2_setup):
+    cfg, params, layout = dsv2_setup
+    eng = ServingEngine(cfg, params, max_batch=2, cache_len=32, layout=layout,
+                        scheduler="aebs", capacity_tokens=64)
+    with pytest.raises(NotImplementedError):
+        eng.reconfigure(n_attn=2)
+
+
+# ---------------------------------------------------------------------------
+# Real multi-device end-to-end (subprocess, 8 forced host devices)
+# ---------------------------------------------------------------------------
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_config
+from repro.core.aebs import ReplicaLayout
+from repro.models import model as model_mod
+from repro.serving.engine import ServingEngine
+from repro.serving.request import WorkloadSpec, sample_requests
+
+assert len(jax.devices()) == 8
+cfg = get_config("dsv2-lite-reduced")
+params = model_mod.init_params(cfg, 0)
+layout = ReplicaLayout.round_robin(cfg.num_experts, 2, 3)
+
+spec = WorkloadSpec(mean_input=5, mean_output=8, vocab_size=cfg.vocab_size,
+                    max_input=8, max_output=8, seed=0)
+def reqs():
+    return sample_requests(spec, np.linspace(0, 0.05, 4), with_prompts=True)
+
+outs = {}
+for name, kw in [("mono", dict(executor="mono")),
+                 ("disagg", dict(executor="disagg", n_attn=2))]:
+    eng = ServingEngine(cfg, params, max_batch=4, cache_len=32, layout=layout,
+                        scheduler="aebs", capacity_tokens=64, **kw)
+    m = eng.run(reqs(), max_steps=500)
+    assert m["completed"] == 4, m
+    outs[name] = {r.rid: r.generated for r in eng.completed}
+    if name == "disagg":
+        # the pools must be real, disjoint devices
+        ds = eng.disagg.pools
+        assert len({d.id for d in ds.attn_devices + ds.moe_devices}) == 4
+        assert m["regime_counts"] and m["transfer_bytes_total"] > 0
+assert outs["mono"] == outs["disagg"], outs
+print("DISAGG_OK", outs["disagg"])
+"""
+
+
+def test_disagg_multidevice_subprocess():
+    r = subprocess.run(
+        [sys.executable, "-c", SCRIPT],
+        capture_output=True,
+        text=True,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "JAX_PLATFORMS": "cpu",
+             "HOME": "/root"},
+        cwd="/root/repo",
+        timeout=600,
+    )
+    assert "DISAGG_OK" in r.stdout, r.stdout + "\n" + r.stderr
