@@ -30,6 +30,7 @@ MODULES = [
     "engine_schedulers",
     "moe_dispatch_bench",
     "disagg_pipeline_bench",
+    "prefill_disagg_bench",
     "roofline_report",
 ]
 

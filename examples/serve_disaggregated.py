@@ -2,16 +2,21 @@
 
 Two demonstrations, both REAL multi-device execution on CPU host devices:
 
-A. **Two-pool engine (pool mode)** — ``ServingEngine(executor="disagg")``
-   serves a continuous-batching request stream with attention stages on a
-   2-device attention pool and expert stages on a 4-device MoE pool.  Every
-   layer performs the explicit activation hand-off whose pattern (case-1 /
-   case-2) is chosen per step by the adaptive two-phase model; the engine
-   telemetry shows the regime, the bytes moved, and the AEBS ``a_max``.
-   Mid-run the autoscaling path is exercised for real: ``reconfigure``
-   grows the attention pool 2→3 while the MoE pool (and its pinned expert
-   weights) stays untouched — only the attention side re-lowers, and the
-   in-flight KV caches are preserved.
+A. **Three-pool engine (pool mode)** — ``ServingEngine(executor="disagg")``
+   serves a continuous-batching request stream with chunked prompt prefill
+   on a 2-device prefill pool, attention stages on a 2-device attention
+   pool, and expert stages on a 4-device MoE pool.  Admission is pipelined:
+   each prompt streams chunk-by-chunk from the prefill pool into the
+   attention pool's batch-sharded KV caches (slot lifecycle reserved →
+   prefilling → active), so decode never stalls on a long prompt; every
+   decode layer performs the explicit activation hand-off whose pattern
+   (case-1 / case-2) is chosen per step by the adaptive two-phase model.
+   Telemetry shows the regime, bytes moved, AEBS ``a_max``, TTFT and the
+   (zero) decode-stall time.  Mid-run the autoscaling path is exercised for
+   real: one ``reconfigure`` call rescales 2P2A4E → 1P3A4E — the prefill
+   pool shrinks, the attention pool grows, the MoE pool (and its pinned
+   expert weights) stays untouched, and the in-flight KV caches are
+   preserved.
 
 B. **SPMD deployment (full model)** — the production mapping (DESIGN.md §2):
    a (data=2, model=4) mesh where the model axis is the MoE pool; the
@@ -39,7 +44,7 @@ from repro.serving.trace import poisson_arrivals
 
 
 def pool_mode_demo():
-    print("=== A. two-pool engine: 2 attention + 4 MoE devices, real exchange ===")
+    print("=== A. three-pool engine: 2 prefill + 2 attention + 4 MoE devices ===")
     cfg = get_config("dsv2-lite-reduced")
     params = model_mod.init_params(cfg, 0)
     layout = ReplicaLayout.round_robin(cfg.num_experts, 4, 2)
@@ -47,28 +52,37 @@ def pool_mode_demo():
     eng = ServingEngine(
         cfg, params, max_batch=6, cache_len=64, layout=layout,
         scheduler="aebs", capacity_tokens=64,
-        executor="disagg", n_attn=2,
+        executor="disagg", n_attn=2, n_prefill=2, prefill_chunk=8,
     )
-    spec = WorkloadSpec(mean_input=6, mean_output=12, vocab_size=cfg.vocab_size,
-                        max_input=16, max_output=16, seed=0)
+    pools = eng.disagg.pools
+    print(f"  pools: prefill={[d.id for d in pools.prefill_devices]} "
+          f"attn={[d.id for d in pools.attn_devices]} "
+          f"moe={[d.id for d in pools.moe_devices]} (admission={eng.admission})")
+    spec = WorkloadSpec(mean_input=12, mean_output=12, vocab_size=cfg.vocab_size,
+                        max_input=32, max_output=16, seed=0)
     reqs = sample_requests(spec, poisson_arrivals(100.0, 0.12, seed=0)[:12], with_prompts=True)
 
     t0 = time.perf_counter()
-    eng.run(reqs[:6])
-    print(f"  phase 1 (2A4E): served 6 requests in {time.perf_counter()-t0:.1f}s wall")
+    m = eng.run(reqs[:6])
+    print(f"  phase 1 (2P2A4E): served 6 requests in {time.perf_counter()-t0:.1f}s wall "
+          f"({m.get('prefill_chunks', 0)} prompt chunks streamed, "
+          f"decode stall {m['decode_stall_time']:.3f}s)")
 
-    relower = eng.reconfigure(n_attn=3)  # scale the attention pool only
-    print(f"  reconfigure 2A4E → 3A4E: re-lowered pools {relower} "
+    # one call, three independent pools: prefill shrinks, attention grows,
+    # MoE (and its pinned expert weights) untouched
+    relower = eng.reconfigure(n_attn=3, n_prefill=1)
+    print(f"  reconfigure 2P2A4E → 1P3A4E: re-lowered pools {relower} "
           "(KV caches re-sharded in place, expert weights untouched)")
 
     t0 = time.perf_counter()
     m = eng.run(reqs[6:])
-    print(f"  phase 2 (3A4E): served 6 more in {time.perf_counter()-t0:.1f}s wall")
+    print(f"  phase 2 (1P3A4E): served 6 more in {time.perf_counter()-t0:.1f}s wall")
     print(f"  telemetry: regimes={m['regime_counts']} "
           f"bytes/step={m['transfer_bytes_per_step']:.0f} "
           f"a_max mean={m['amax_mean']:.2f} max={m['amax_max']}")
     print(f"  completed={m['completed']} tokens={m['tokens']} "
-          f"tpot_mean={m['tpot_mean']*1e3:.1f}ms")
+          f"ttft_mean={m['ttft_mean']*1e3:.1f}ms "
+          f"tpot_mean={m['tpot_mean']*1e3:.1f}ms truncated={m['truncated']}")
 
 
 def spmd_mode_demo():

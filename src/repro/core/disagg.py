@@ -41,34 +41,47 @@ from repro.core.aebs import ReplicaLayout
 
 @dataclasses.dataclass
 class DisaggConfig:
-    """A (n_a, n_e) deployment with its expert layout and comm scheme."""
+    """A (n_p, n_a, n_e) deployment with its expert layout and comm scheme.
+
+    ``n_prefill`` is the third sub-cluster: devices dedicated to chunked
+    prompt prefill, feeding the attention pool's KV caches via streamed
+    per-chunk hand-off (0 = prefill runs inline on the default device, the
+    pre-disaggregation behaviour)."""
 
     n_attn: int
     n_moe: int
     layout: ReplicaLayout
     comm_scheme: str = "2pc"  # 2pc | 1pc
     gate_side: str = "moe"  # moe (EGate) | attn (AGate)
+    n_prefill: int = 0
 
     @property
     def total_instances(self) -> int:
-        return self.n_attn + self.n_moe
+        return self.n_prefill + self.n_attn + self.n_moe
 
     def describe(self) -> str:
-        return f"{self.n_attn}A{self.n_moe}E"
+        p = f"{self.n_prefill}P" if self.n_prefill else ""
+        return f"{p}{self.n_attn}A{self.n_moe}E"
 
 
 @dataclasses.dataclass
 class DevicePools:
-    """The two device sub-clusters plus their fabric hierarchy.
+    """The device sub-clusters plus their fabric hierarchy.
 
     ``node_size`` is the number of consecutive devices sharing the fast
     fabric (NVLink node / ICI neighbourhood); the two-phase exchange
     aggregates within a node before crossing node boundaries.
+
+    ``prefill_devices`` is the third sub-cluster: full-model replicas that
+    run chunked prompt prefill and stream each finished chunk's KV slab into
+    the attention pool's batch-sharded caches.  It may be empty (prefill
+    then runs inline on the default device — the pre-disaggregation mode).
     """
 
     attn_devices: List[jax.Device]
     moe_devices: List[jax.Device]
     node_size: int = 1
+    prefill_devices: List[jax.Device] = dataclasses.field(default_factory=list)
 
     @staticmethod
     def split(
@@ -77,27 +90,40 @@ class DevicePools:
         devices: Optional[Sequence[jax.Device]] = None,
         node_size: int = 1,
         allow_reuse: bool = False,
+        n_prefill: int = 0,
     ) -> "DevicePools":
-        """Split ``devices`` into the two pools.
+        """Split ``devices`` into the three pools.
 
-        Attention devices are taken from the *front* of the list and MoE
-        devices from the *back*, so resizing one pool never relocates the
-        other's devices — an incremental reconfiguration (§3.5) then really
-        does leave the unaffected pool's weights in place.
+        Anchoring invariant: attention devices are taken from the *front* of
+        the list, MoE devices from the *back*, and prefill devices from the
+        tail of the middle gap (immediately ahead of the MoE pool).  Resizing
+        the attention pool therefore never relocates prefill or MoE devices,
+        and resizing the prefill pool never relocates either decode pool —
+        an incremental reconfiguration (§3.5) really does leave the
+        unaffected pools' weights in place.  (Resizing the MoE pool re-anchors
+        the prefill pool; prefill replicas hold no cross-request state, so
+        that relocation is one weight placement, not a cache migration.)
 
         ``allow_reuse=True`` maps pools onto too-few devices round-robin —
         the degenerate single-host mode used by tests that must stay on one
         device (the transfer schedule still runs; the puts are local).
         """
         devs = list(devices if devices is not None else jax.devices())
-        if len(devs) < n_attn + n_moe:
+        total = n_attn + n_moe + n_prefill
+        if len(devs) < total:
             if not allow_reuse:
                 raise ValueError(
-                    f"need {n_attn + n_moe} devices, have {len(devs)} "
+                    f"need {total} devices, have {len(devs)} "
                     "(set XLA_FLAGS=--xla_force_host_platform_device_count=N)"
                 )
-            devs = [devs[i % len(devs)] for i in range(n_attn + n_moe)]
-        return DevicePools(devs[:n_attn], devs[len(devs) - n_moe :], node_size)
+            devs = [devs[i % len(devs)] for i in range(total)]
+        n = len(devs)
+        return DevicePools(
+            devs[:n_attn],
+            devs[n - n_moe :],
+            node_size,
+            devs[n - n_moe - n_prefill : n - n_moe],
+        )
 
     # -- fabric hierarchy ----------------------------------------------------
     def _groups(self, devs: List[jax.Device]) -> List[List[jax.Device]]:
@@ -216,10 +242,20 @@ def plan_exchange(pools: DevicePools, regime: str) -> Tuple[List[Chunk], List[Tr
 
 
 def reconfigure(
-    cfg_from: DisaggConfig, n_attn: int, n_moe: int, layout: ReplicaLayout
+    cfg_from: DisaggConfig,
+    n_attn: int,
+    n_moe: int,
+    layout: ReplicaLayout,
+    n_prefill: Optional[int] = None,
 ) -> DisaggConfig:
     """Incremental reconfiguration (§3.5): a new deployment object.  The
     pool-mode executor actuates it with ``DisaggExecutor.reconfigure`` —
     re-lowering only the pool whose count changed — while the SPMD engine
     re-lowers for the new mesh ('recompile-and-swap', DESIGN.md §2)."""
-    return dataclasses.replace(cfg_from, n_attn=n_attn, n_moe=n_moe, layout=layout)
+    return dataclasses.replace(
+        cfg_from,
+        n_attn=n_attn,
+        n_moe=n_moe,
+        layout=layout,
+        n_prefill=cfg_from.n_prefill if n_prefill is None else n_prefill,
+    )

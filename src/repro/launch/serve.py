@@ -29,6 +29,17 @@ def main():
         "set XLA_FLAGS=--xla_force_host_platform_device_count=N for real pools)",
     )
     ap.add_argument("--n-attn", type=int, default=2, help="attention pool size (disagg)")
+    ap.add_argument(
+        "--n-prefill", type=int, default=0,
+        help="prefill pool size (third sub-cluster; >0 switches admission to "
+        "the pipelined chunked-prefill path unless --admission overrides)",
+    )
+    ap.add_argument(
+        "--admission", default=None, choices=["blocking", "pipelined"],
+        help="blocking = whole-prompt prefill inline (legacy); pipelined = "
+        "chunked prefill on the prefill pool, streamed KV hand-off",
+    )
+    ap.add_argument("--prefill-chunk", type=int, default=64, help="prefill chunk size (tokens)")
     ap.add_argument("--ping-pong", action="store_true", help="m=2 micro-batch overlap (disagg)")
     args = ap.parse_args()
 
@@ -60,11 +71,15 @@ def main():
         scheduler=args.scheduler,
         executor=args.executor,
         n_attn=args.n_attn,
+        n_prefill=args.n_prefill,
+        admission=args.admission,
+        prefill_chunk=args.prefill_chunk,
         ping_pong=args.ping_pong,
     )
     print(
         f"serving {len(reqs)} requests on {cfg.name} "
-        f"(scheduler={args.scheduler}, executor={args.executor})"
+        f"(scheduler={args.scheduler}, executor={args.executor}, "
+        f"admission={eng.admission}, n_prefill={args.n_prefill})"
     )
     m = eng.run(reqs)
     for k, v in m.items():

@@ -116,11 +116,16 @@ def build_disagg_executor(
     capacity: Optional[int] = None,
     ping_pong: bool = False,
     node_size: int = 1,
+    n_prefill: int = 0,
     devices=None,
 ):
-    """Launch-layer entry for the two-pool deployment: split the device set
-    into (n_attn, n_moe) pools, derive a default replica layout when none is
-    given, and lower the per-layer stage functions onto the pools.
+    """Launch-layer entry for the pool deployment: split the device set into
+    (n_attn, n_moe) decode pools plus an optional ``n_prefill`` prefill
+    sub-cluster, derive a default replica layout when none is given, and
+    lower the per-layer stage functions onto the pools.  The prefill devices
+    ride on ``executor.pools.prefill_devices`` — ``ServingEngine`` (or a
+    direct :class:`repro.serving.prefill.PrefillWorker`) places full-model
+    replicas there for chunked prompt prefill with streamed KV hand-off.
 
     The returned :class:`repro.serving.disagg.DisaggExecutor` is what a
     controller decision later re-lowers incrementally (only the affected
@@ -131,8 +136,8 @@ def build_disagg_executor(
 
     devs = list(devices) if devices is not None else jax.devices()
     pools = DevicePools.split(
-        n_attn, n_moe, devs, node_size=node_size,
-        allow_reuse=len(devs) < n_attn + n_moe,
+        n_attn, n_moe, devs, node_size=node_size, n_prefill=n_prefill,
+        allow_reuse=len(devs) < n_attn + n_moe + n_prefill,
     )
     if layout is None:
         layout = serving_layout(cfg, n_moe)
@@ -141,6 +146,39 @@ def build_disagg_executor(
         max_batch=max_batch, cache_len=cache_len,
         scheduler=scheduler, capacity=capacity, ping_pong=ping_pong,
         devices=devs,
+    )
+
+
+def build_prefill_worker(
+    cfg: ModelConfig,
+    params,
+    n_prefill: int,
+    *,
+    cache_len: int,
+    chunk: int = 64,
+    n_attn: int = 0,
+    n_moe: int = 0,
+    devices=None,
+    prefill_time_fn=None,
+):
+    """Launch-layer entry for a prefill sub-cluster: a
+    :class:`repro.serving.prefill.PrefillWorker` over the prefill slice of
+    the standard three-way split.  Pass the deployment's ``n_attn``/``n_moe``
+    so the worker lands on the *same* devices a composed
+    :func:`build_disagg_executor` reserves for prefill (immediately ahead of
+    the MoE pool) — with the defaults (0, 0) the worker takes the tail of the
+    device list, the standalone single-pool layout."""
+    from repro.core.disagg import DevicePools
+    from repro.serving.prefill import PrefillWorker
+
+    devs = list(devices) if devices is not None else jax.devices()
+    pools = DevicePools.split(
+        n_attn, n_moe, devs, n_prefill=n_prefill,
+        allow_reuse=len(devs) < n_attn + n_moe + n_prefill,
+    )
+    return PrefillWorker(
+        cfg, params, pools.prefill_devices,
+        cache_len=cache_len, chunk=chunk, prefill_time_fn=prefill_time_fn,
     )
 
 

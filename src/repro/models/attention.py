@@ -152,6 +152,80 @@ def attention_cross(
     return jnp.einsum("bsnh,nhd->bsd", out, params["wo"])
 
 
+def attention_prefill_chunk(
+    params: Params,
+    x: jax.Array,  # [b, c, d] — one prompt chunk
+    cache_k: jax.Array,  # [b, S, nkv, hd] bf16
+    cache_v: jax.Array,
+    start: jax.Array,  # scalar int32 — absolute position of the chunk's first token
+    cfg,
+    window: Optional[int] = None,
+):
+    """Chunked prefill: attend a c-token prompt chunk against the cache.
+
+    The chunk's keys/values are written into the cache at absolute positions
+    ``[start, start+c)`` and the chunk's queries attend causally over
+    ``cache[0:start+c]`` — i.e. all previously prefilled chunks plus the
+    chunk itself.  Iterating this over a prompt is mathematically identical
+    to :func:`attention_full` on the whole prompt (and bit-identical in
+    practice: per-token projections/rope are position-indexed, and masked
+    cache entries contribute exact zeros to the softmax/PV reductions — the
+    same padding argument :func:`attention_decode` already relies on).
+    Quantised (int8) caches are rejected: earlier chunks would be read back
+    through the int8 round-trip while :func:`attention_full` attends raw
+    keys, breaking that equivalence — ``supports_chunked_prefill`` gates
+    ``kv_quant`` configs to the whole-prompt fallback.
+
+    Returns ``(out [b,c,d], new_cache_k, new_cache_v)``.
+    """
+    if cache_k.dtype == jnp.int8:
+        raise ValueError("chunked prefill does not support quantised KV caches")
+    b, c, _ = x.shape
+    S = cache_k.shape[1]
+    nkv = cfg.num_kv_heads
+    pos = start + jnp.arange(c)  # [c] absolute positions
+    q = jnp.einsum("bsd,dnh->bsnh", x, params["wq"])
+    k = jnp.einsum("bsd,dnh->bsnh", x, params["wk"])
+    v = jnp.einsum("bsd,dnh->bsnh", x, params["wv"])
+    if cfg.use_rope:
+        q = apply_rope(q, jnp.broadcast_to(pos, (b, c)), cfg.rope_theta)
+        k = apply_rope(k, jnp.broadcast_to(pos, (b, c)), cfg.rope_theta)
+    qg = _group_q(q, nkv)
+    idx = jnp.arange(S)
+    if window is not None:
+        # Rolling layout: slot s holds the key of absolute position
+        # s + S·⌊(last−s)/S⌋ where last = start−1 is the newest *pre-chunk*
+        # position (negative ⇒ slot never written).  The chunk's own keys are
+        # attended from a separate fresh segment rather than written first —
+        # writing up-front would let a chunk key overwrite a predecessor
+        # (q−S) that earlier queries of the same chunk still need, and would
+        # desynchronise slot indices from the causal mask once the buffer
+        # wraps (prompts longer than the window).
+        if c > S:
+            raise ValueError(f"chunk ({c}) must not exceed the window ({S})")
+        abs_pos = idx + S * ((start - 1 - idx) // S)  # [S] per-slot key position
+        cache_mask = (
+            (abs_pos[None, :] >= 0)
+            & (abs_pos[None, :] <= pos[:, None])
+            & (abs_pos[None, :] > pos[:, None] - window)
+        )
+        self_mask = (pos[None, :] <= pos[:, None]) & (pos[None, :] > pos[:, None] - window)
+        mask = jnp.concatenate([cache_mask, self_mask], axis=1)  # [c, S+c]
+        k_r = jnp.concatenate([cache_k, k], axis=1)
+        v_r = jnp.concatenate([cache_v, v], axis=1)
+        out = _attend(qg, k_r, v_r, mask[None, None, None], cfg.attn_logit_softcap)
+        slots = pos % S
+        cache_k = cache_k.at[:, slots].set(k.astype(cache_k.dtype))
+        cache_v = cache_v.at[:, slots].set(v.astype(cache_v.dtype))
+    else:
+        cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), start, axis=1)
+        cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), start, axis=1)
+        mask = idx[None, :] <= pos[:, None]  # [c, S]: causal over cache + chunk
+        out = _attend(qg, cache_k, cache_v, mask[None, None, None], cfg.attn_logit_softcap)
+    y = jnp.einsum("bsnh,nhd->bsd", out, params["wo"])
+    return y, cache_k, cache_v
+
+
 def quantize_kv(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
     """int8 absmax quantisation over head_dim: [..., hd] → (int8, scale[...])."""
     scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0

@@ -77,6 +77,14 @@ def prefill(params, tokens, cfg, cache_len: int, extra=None):
     return transformer.prefill(params, tokens, cfg, cache_len, extra=extra)
 
 
+def prefill_chunk(params, tokens, caches, start, cfg, extra=None):
+    return transformer.prefill_chunk(params, tokens, caches, start, cfg, extra=extra)
+
+
+def supports_chunked_prefill(cfg) -> bool:
+    return transformer.supports_chunked_prefill(cfg)
+
+
 def decode_step(params, tokens, caches, cache_index, cfg, extra=None, unroll=False):
     return transformer.decode_step(
         params, tokens, caches, cache_index, cfg, extra=extra, unroll=unroll

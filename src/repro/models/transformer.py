@@ -221,6 +221,26 @@ def attention_stage_full(lp, x, cfg, positions, window=None, enc_out=None, retur
     return x, h2, kv
 
 
+def attention_stage_chunk(lp, x, kv, start, cfg, window=None):
+    """Chunked-prefill analogue of :func:`attention_stage`: ln1 → chunk
+    attention against the cache (writes the chunk's KV at absolute positions
+    ``[start, start+c)``) → residual → ln2.
+
+    Same contract as the other stages — ``(x_resid, h_ffn, new_kv)`` — so the
+    prefill worker composes it with :func:`moe_stage` exactly like the decode
+    executors compose their halves.  (Quantised caches never reach here:
+    :func:`supports_chunked_prefill` routes them to whole-prompt prefill.)
+    """
+    h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+    h, ck, cv = attn_mod.attention_prefill_chunk(
+        lp["attn"], h, kv["k"], kv["v"], start, cfg, window=window
+    )
+    new_kv = {"k": ck, "v": cv}
+    x = x + h
+    h2 = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+    return x, h2, new_kv
+
+
 def moe_stage(lp, x, h, cfg, moe_ctx=None, with_aux=False):
     """Expert half of one layer: MoE (or dense) FFN on the normalised input
     ``h``, added onto the residual stream ``x``.
@@ -534,3 +554,94 @@ def prefill(
     if aux.get("enc_out") is not None:
         out["enc_out"] = aux["enc_out"]
     return logits, out
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill: fixed-size prompt chunks against decode-format caches
+# ---------------------------------------------------------------------------
+
+
+def supports_chunked_prefill(cfg) -> bool:
+    """Chunked prefill covers pure attention+FFN stacks (dense / dense_local /
+    moe) with unquantised KV caches.  Recurrent (ssm/hybrid) stacks consume
+    the prompt serially through a state that :func:`prefill_chunk` does not
+    carry, and encoder-decoder / frontend models need their encoder pass
+    first — those fall back to whole-prompt :func:`prefill`.  Quantised
+    caches are excluded because chunk queries would attend earlier chunks
+    through the int8 round-trip while whole-prompt :func:`prefill` attends
+    raw keys — breaking the bit-equivalence contract the prefill pipeline is
+    built on (the fallback keeps admission modes bit-identical there too)."""
+    if cfg.encoder_layers or cfg.frontend or cfg.family in ("audio", "ssm", "hybrid"):
+        return False
+    if cfg.kv_quant:
+        return False
+    period, _ = period_pattern(cfg)
+    return all(k in ("dense", "dense_local", "moe") for k in period)
+
+
+def prefill_chunk(
+    params: Params,
+    tokens: jax.Array,  # [b, c] — one prompt chunk
+    caches: Dict[str, jax.Array],  # decode-format stacked caches (partially filled)
+    start: jax.Array,  # scalar int32 — absolute position of the chunk's first token
+    cfg,
+    extra: Optional[Dict[str, Any]] = None,
+):
+    """Process one fixed-size prompt chunk against partially-filled decode
+    caches: every layer runs :func:`attention_stage_chunk` (chunk queries
+    over all previously prefilled positions plus the chunk, chunk KV written
+    at ``[start, start+c)``) then :func:`moe_stage`.
+
+    Iterated over a prompt, this is bit-equivalent to whole-prompt
+    :func:`prefill` whenever expert capacity is ample (per-chunk MoE packing
+    can only *reduce* capacity drops — the same caveat as micro-batch
+    ping-pong): per-token projections, rope and routing are position-indexed,
+    and chunk-causal attention sees exactly the whole-prompt key sets.
+
+    Returns ``(last-token logits [b, vocab], new caches)``.
+    """
+    if not supports_chunked_prefill(cfg):
+        raise ValueError(f"{cfg.name}: architecture does not support chunked prefill")
+    period, n_periods = period_pattern(cfg)
+    x = embed_tokens(params, tokens, cfg, extra)
+    moe_ctx = (extra or {}).get("moe_ctx")
+
+    def regroup(name):
+        a = caches[name]
+        return a.reshape(n_periods, a.shape[0] // n_periods, *a.shape[1:])
+
+    scan_caches = {k: regroup(k) for k in caches if k not in ("enc_out",)}
+
+    def body(x, scanned):
+        counters = {"full": 0, "local": 0}
+
+        def kv_slice(suffix, i):
+            return {"k": scanned[f"kv_k{suffix}"][i], "v": scanned[f"kv_v{suffix}"][i]}
+
+        def kv_write(suffix, i, new_kv):
+            scanned[f"kv_k{suffix}"] = scanned[f"kv_k{suffix}"].at[i].set(new_kv["k"])
+            scanned[f"kv_v{suffix}"] = scanned[f"kv_v{suffix}"].at[i].set(new_kv["v"])
+
+        for pos, kind in enumerate(period):
+            lp = scanned["blocks"][f"pos{pos}"]
+            if kind in ("dense", "moe"):
+                i = counters["full"]
+                counters["full"] += 1
+                x, h2, new_kv = attention_stage_chunk(lp, x, kv_slice("", i), start, cfg)
+                kv_write("", i, new_kv)
+            else:  # dense_local
+                i = counters["local"]
+                counters["local"] += 1
+                x, h2, new_kv = attention_stage_chunk(
+                    lp, x, kv_slice("_local", i), start, cfg, window=cfg.sliding_window
+                )
+                kv_write("_local", i, new_kv)
+            x = moe_stage(lp, x, h2, cfg, moe_ctx if kind == "moe" else None)
+        return x, {k: scanned[k] for k in scan_caches}
+
+    scanned_in = dict(scan_caches)
+    scanned_in["blocks"] = params["blocks"]
+    x, new_caches = jax.lax.scan(lambda x, sc: body(x, dict(sc)), x, scanned_in)
+    out_caches = {k: v.reshape(caches[k].shape) for k, v in new_caches.items()}
+    logits = lm_head(params, x[:, -1, :], cfg)
+    return logits, out_caches

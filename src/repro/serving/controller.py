@@ -7,8 +7,14 @@ recent routing trace at each reconfiguration (§3.5 "expert placement").
 
 A decision is no longer advisory: :meth:`AutoScaler.actuate` applies it to a
 live ``ServingEngine(executor="disagg")`` via ``engine.reconfigure`` —
-attention and MoE pool counts move independently mid-run, only the affected
-pool is re-lowered, and in-flight KV caches are preserved.
+prefill, attention and MoE pool counts move independently mid-run, only the
+affected pools are re-lowered, and in-flight KV caches are preserved.
+
+The prefill pool scales on its *own* demand signal: prompt tokens/s (from
+:meth:`AutoScaler.observe`'s ``input_tokens``) over the sliding window,
+divided by the per-device prefill throughput ``prefill_tok_rate`` — long
+prompts grow the prefill sub-cluster without touching the decode pools, and
+vice versa.
 """
 
 from __future__ import annotations
@@ -30,6 +36,7 @@ class ScalingEvent:
     n_e: int
     tpot: float
     feasible: bool
+    n_p: Optional[int] = None  # prefill pool decision (None = not scaled)
 
 
 class AutoScaler:
@@ -40,25 +47,51 @@ class AutoScaler:
         n_max: int = 16,
         window: float = 300.0,
         hysteresis: float = 0.1,
+        prefill_tok_rate: float = 0.0,  # prompt tokens/s one prefill device sustains
+        n_prefill_max: Optional[int] = None,
     ):
         self.scaler = SLOScaler(model, n_max=n_max)
         self.slo = slo
         self.window = window
         self.hysteresis = hysteresis
+        self.prefill_tok_rate = prefill_tok_rate
+        self.n_prefill_max = n_prefill_max if n_prefill_max is not None else n_max
         self._arrivals: List[float] = []
         self._tokens: List[float] = []
+        self._input_tokens: List[float] = []
         self.current: Optional[EvalResult] = None
         self.events: List[ScalingEvent] = []
 
     # -- demand estimation ---------------------------------------------------
-    def observe(self, t: float, tokens: float) -> None:
+    def observe(self, t: float, tokens: float, input_tokens: float = 0.0) -> None:
+        """Log one arrival: ``tokens`` drives decode scaling, ``input_tokens``
+        (the prompt length) drives prefill-pool scaling."""
         self._arrivals.append(t)
         self._tokens.append(tokens)
+        self._input_tokens.append(input_tokens)
 
     def demand(self, now: float) -> float:
         lo = now - self.window
         tok = sum(tk for t, tk in zip(self._arrivals, self._tokens) if t >= lo)
         return tok / self.window
+
+    def prefill_demand(self, now: float) -> float:
+        """Prompt tokens/s over the sliding window."""
+        lo = now - self.window
+        tok = sum(tk for t, tk in zip(self._arrivals, self._input_tokens) if t >= lo)
+        return tok / self.window
+
+    def decide_prefill(self, now: float, demand: Optional[float] = None) -> Optional[int]:
+        """Size the prefill pool independently of the decode pools: enough
+        devices to keep prompt-token demand below per-device throughput.
+        Returns None when prefill scaling is disabled (no rate calibrated)."""
+        if self.prefill_tok_rate <= 0:
+            return None
+        lam_in = demand if demand is not None else self.prefill_demand(now)
+        if lam_in <= 0:
+            return 1  # keep one warm replica — admission stays pipelined
+        n_p = int(np.ceil(lam_in / self.prefill_tok_rate))
+        return max(1, min(n_p, self.n_prefill_max))
 
     # -- decision -------------------------------------------------------------
     def decide(self, now: float, demand: Optional[float] = None) -> EvalResult:
@@ -101,11 +134,22 @@ class AutoScaler:
                 "use decide() for advisory-only scaling"
             )
         best = self.decide(now)
+        # prefill devices only pay off under pipelined admission — a blocking
+        # engine would keep stalling the decode clock no matter the pool size
+        n_p = (
+            self.decide_prefill(now)
+            if getattr(engine, "admission", None) == "pipelined"
+            else None
+        )
+        if self.events:
+            self.events[-1] = dataclasses.replace(self.events[-1], n_p=n_p)
         changed_e = best.n_e != len(cur.pools.moe_devices)
         layout = (
             self.replan_layout(trace, best.n_e)
             if trace is not None and changed_e
             else None
         )
-        engine.reconfigure(n_attn=best.n_a, n_moe=best.n_e, layout=layout)
+        engine.reconfigure(
+            n_attn=best.n_a, n_moe=best.n_e, layout=layout, n_prefill=n_p
+        )
         return best

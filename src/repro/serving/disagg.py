@@ -124,17 +124,25 @@ class DisaggExecutor:
             self._all_devices = list(devices)
         else:
             # reconfigure must re-split the same universe the pools came
-            # from: detect the standard front/back split of the global device
+            # from: detect the standard three-way split of the global device
             # list; anything else is a custom pool set — stay inside it.
             universe = jax.devices()
-            combo = list(pools.attn_devices) + list(pools.moe_devices)
+            combo = (
+                list(pools.attn_devices)
+                + list(pools.prefill_devices)
+                + list(pools.moe_devices)
+            )
+            n_a, n_e = len(pools.attn_devices), len(pools.moe_devices)
+            n_p = len(pools.prefill_devices)
             std = (
-                universe[: len(pools.attn_devices)]
-                + universe[len(universe) - len(pools.moe_devices) :]
+                universe[:n_a]
+                + universe[len(universe) - n_e - n_p : len(universe) - n_e]
+                + universe[len(universe) - n_e :]
             )
             self._all_devices = None if combo == std else combo
         self.disagg_cfg = DisaggConfig(
-            len(pools.attn_devices), len(pools.moe_devices), layout
+            len(pools.attn_devices), len(pools.moe_devices), layout,
+            n_prefill=len(pools.prefill_devices),
         )
         self.relower_log: List[Dict[str, bool]] = []
 
@@ -338,7 +346,25 @@ class DisaggExecutor:
     # cache interop (engine format: stacked [L, b, S, ...])
     # ------------------------------------------------------------------
     def scatter_prefill(self, one_caches: Dict[str, jax.Array], slot: int) -> None:
-        """Write a single-request prefill cache (batch dim 1) into ``slot``."""
+        """Write a single-request prefill cache (batch dim 1) into ``slot`` —
+        the whole-prompt special case of the streamed chunk hand-off."""
+        length = next(
+            one_caches[name].shape[2]
+            for short, name in _KV_KEYS.items()
+            if short in self._kv[0][0]
+        )
+        self.scatter_prefill_chunk(one_caches, slot, 0, length)
+
+    def scatter_prefill_chunk(
+        self, one_caches: Dict[str, jax.Array], slot: int, start: int, length: int
+    ) -> None:
+        """Stream one prefill chunk's KV slab into ``slot``: only the rows
+        holding prompt positions ``[start, start+length)`` cross the wire
+        (prefill pool → owning attention shard), never the whole prompt
+        cache.  Row mapping via :func:`repro.serving.kv_cache.chunk_rows`
+        (shared with the mono engine's scatter)."""
+        from repro.serving.kv_cache import chunk_rows
+
         shard = next(s for s in self.shards if s.lo <= slot < s.hi)
         si = self.shards.index(shard)
         dev = self.pools.attn_devices[shard.dev_index]
@@ -346,8 +372,11 @@ class DisaggExecutor:
         for l, layer_kv in enumerate(self._kv[si]):
             for short, name in _KV_KEYS.items():
                 if short in layer_kv:
-                    row = jax.device_put(one_caches[name][l, 0], dev)
-                    layer_kv[short] = layer_kv[short].at[local].set(row)
+                    idx = chunk_rows(one_caches[name].shape[2], start, length)
+                    rows = jax.device_put(one_caches[name][l, 0, idx], dev)
+                    layer_kv[short] = (
+                        layer_kv[short].at[local, idx].set(rows.astype(layer_kv[short].dtype))
+                    )
 
     def load_caches(self, caches: Dict[str, jax.Array]) -> None:
         """Adopt an engine-format stacked cache dict (re-shards onto the pool)."""
@@ -376,24 +405,30 @@ class DisaggExecutor:
         n_attn: Optional[int] = None,
         n_moe: Optional[int] = None,
         layout: Optional[ReplicaLayout] = None,
+        n_prefill: Optional[int] = None,
     ) -> Dict[str, bool]:
         cur_a = len(self.pools.attn_devices)
         cur_e = len(self.pools.moe_devices)
+        cur_p = len(self.pools.prefill_devices)
         n_attn = cur_a if n_attn is None else n_attn
         n_moe = cur_e if n_moe is None else n_moe
+        n_prefill = cur_p if n_prefill is None else n_prefill
         relower = {
             "attn": n_attn != cur_a,
             "moe": n_moe != cur_e or layout is not None,
+            # a MoE resize re-anchors the (tail-anchored) prefill pool too
+            "prefill": n_prefill != cur_p or (n_prefill > 0 and n_moe != cur_e),
         }
-        if not (relower["attn"] or relower["moe"]):
+        if not (relower["attn"] or relower["moe"] or relower["prefill"]):
             self.relower_log.append(relower)
             return relower
 
         caches = self.export_caches() if relower["attn"] else None
         devs = self._all_devices
-        allow_reuse = len(devs or jax.devices()) < n_attn + n_moe
+        allow_reuse = len(devs or jax.devices()) < n_attn + n_moe + n_prefill
         self.pools = DevicePools.split(
-            n_attn, n_moe, devs, node_size=self.pools.node_size, allow_reuse=allow_reuse
+            n_attn, n_moe, devs, node_size=self.pools.node_size,
+            allow_reuse=allow_reuse, n_prefill=n_prefill,
         )
         new_layout = layout or (
             self.layout
@@ -410,7 +445,9 @@ class DisaggExecutor:
         else:
             # MoE-only change still needs fresh exchange plans (pool changed)
             self._plans = {r: plan_exchange(self.pools, r) for r in ("case1", "case2")}
-        self.disagg_cfg = disagg_reconfigure(self.disagg_cfg, n_attn, n_moe, new_layout)
+        self.disagg_cfg = disagg_reconfigure(
+            self.disagg_cfg, n_attn, n_moe, new_layout, n_prefill=n_prefill
+        )
         self.relower_log.append(relower)
         return relower
 

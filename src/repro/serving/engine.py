@@ -2,15 +2,30 @@
 
 The engine serves a stream of requests against one model deployment:
 
-  * admission: waiting requests are prefetched into free batch slots
-    (per-request prefill, scattered into the batched caches);
+  * admission: waiting requests are placed into free batch slots through one
+    of two admission paths:
+
+      - ``admission="blocking"`` (legacy *schedule*): each request's whole
+        prompt is prefilled before the next decode iteration, charging the
+        decode clock — one long prompt stalls every in-flight request.  The
+        compute itself goes through the same worker/chunking as the
+        pipelined path, so the two admission modes are bit-identical in
+        what they serve and differ only in when;
+      - ``admission="pipelined"`` (default when a prefill pool exists): the
+        request *reserves* a slot and is handed to the
+        :class:`repro.serving.prefill.PrefillWorker`, which chunks the
+        prompt on the dedicated prefill pool and streams each finished
+        chunk's KV slab straight into the decode-side batched caches; the
+        slot walks ``reserved → prefilling → active`` and the decode loop
+        never waits on a prompt;
+
   * decode: one batched decode per iteration with *per-slot* positions
     (continuous batching — slots join/leave independently), through one of
     two executors sharing identical semantics and telemetry:
 
       - ``executor="mono"``: the jitted monolithic ``decode_step`` on the
         default device (single-instance baseline);
-      - ``executor="disagg"``: the two-pool
+      - ``executor="disagg"``: the two-decode-pool
         :class:`repro.serving.disagg.DisaggExecutor` — attention stages on
         ``n_attn`` pool devices, expert stages on the MoE pool, with the
         adaptive two-phase exchange realised per layer and per-step
@@ -21,11 +36,14 @@ The engine serves a stream of requests against one model deployment:
     ``a_max`` telemetry surfaced to the controller.  Dispatch defaults to
     the sort-based grouped path (``repro.models.moe.grouped_dispatch_ffn``)
     — no per-step ``[S_total, d, f]`` weight materialisation;
-  * timing: wall-clock by default, or a pluggable ``step_time_fn`` driven by
-    the analytic performance model (used in tests and the simulator);
+  * timing: wall-clock by default, or pluggable ``step_time_fn`` /
+    ``prefill_time_fn`` driven by the analytic performance model (used in
+    tests and the simulator); the prefill pool keeps its own concurrent
+    timeline, so pipelined admission never charges prompt work to the
+    decode clock;
   * scaling: :meth:`ServingEngine.reconfigure` actuates a controller
-    decision mid-run (§3.5) — pool counts move independently, in-flight KV
-    caches are preserved.
+    decision mid-run (§3.5) — prefill, attention and MoE pool counts move
+    independently, in-flight KV caches are preserved.
 """
 
 from __future__ import annotations
@@ -42,8 +60,12 @@ from repro.core import baselines
 from repro.core.disagg import DevicePools
 from repro.kernels.aebs.ops import aebs_schedule
 from repro.models import model as model_mod
-from repro.models import transformer
-from repro.serving.kv_cache import SlotManager, scatter_prefill_caches
+from repro.serving.kv_cache import (
+    SlotManager,
+    scatter_prefill_caches,
+    scatter_prefill_chunk_caches,
+)
+from repro.serving.prefill import PrefillEvent, PrefillWorker
 from repro.serving.request import Request
 
 SCHEDULERS = {
@@ -66,11 +88,16 @@ class ServingEngine:
         layout: Optional[ReplicaLayout] = None,
         scheduler: str = "aebs",
         capacity_tokens: Optional[int] = None,
+        prefill_capacity_tokens: Optional[int] = None,  # default: capacity_tokens
         dispatch: str = "grouped",  # grouped = slot-indirect hot path (no weight copy)
         step_time_fn: Optional[Callable[[int], float]] = None,
+        prefill_time_fn: Optional[Callable[[int], float]] = None,
         extra_builder: Optional[Callable[[int], Dict]] = None,
         executor: str = "mono",  # mono | disagg
         n_attn: int = 1,
+        n_prefill: int = 0,
+        admission: Optional[str] = None,  # blocking | pipelined (default: pipelined iff n_prefill)
+        prefill_chunk: int = 64,
         pools: Optional[DevicePools] = None,
         node_size: int = 1,
         ping_pong: bool = False,
@@ -83,6 +110,7 @@ class ServingEngine:
         self.layout = layout
         self.scheduler_name = scheduler
         self.step_time_fn = step_time_fn
+        self.prefill_time_fn = prefill_time_fn
         self.extra_builder = extra_builder
         self.executor_name = executor
         self.tokens = jnp.zeros((max_batch, 1), jnp.int32)
@@ -91,6 +119,7 @@ class ServingEngine:
         self.regime_log: List[str] = []
         self.transfer_bytes_log: List[int] = []
         self.completed: List[Request] = []
+        self.decode_stall_time = 0.0  # prefill time charged while decodes were in flight
 
         moe_ctx = None
         if cfg.has_moe and layout is not None and scheduler != "none":
@@ -113,7 +142,8 @@ class ServingEngine:
             if pools is None:
                 pools = DevicePools.split(
                     n_attn, layout.num_instances, node_size=node_size,
-                    allow_reuse=len(jax.devices()) < n_attn + layout.num_instances,
+                    n_prefill=n_prefill,
+                    allow_reuse=len(jax.devices()) < n_attn + layout.num_instances + n_prefill,
                 )
             self.disagg = DisaggExecutor(
                 cfg, params, pools, layout,
@@ -123,6 +153,11 @@ class ServingEngine:
             )
             self.caches = None  # cache residency moves to the executor's pool
         elif executor == "mono":
+            if pools is None and n_prefill:
+                pools = DevicePools.split(
+                    0, 0, n_prefill=n_prefill,
+                    allow_reuse=len(jax.devices()) < n_prefill,
+                )
             self.caches = model_mod.init_decode_caches(cfg, max_batch, cache_len)
         else:
             raise ValueError(f"unknown executor: {executor}")
@@ -133,33 +168,119 @@ class ServingEngine:
 
         self._decode_jit = jax.jit(_decode)
 
-        def _prefill(params, tokens, extra):
-            return model_mod.prefill(params, tokens, cfg, cache_len, extra=extra)
+        # prefill path: logical-expert routing (no scheduling — prompts don't
+        # route through replica slots) on the sort-based grouped dispatch.
+        # Capacity is drop-free by default: the worker fills a None capacity
+        # with each call's own token count (an expert can receive at most
+        # that many tokens), so blocking, pipelined and chunked prefill all
+        # see zero drops and stay bit-identical regardless of the decode
+        # budget.  ``prefill_capacity_tokens`` overrides this with a fixed
+        # cap for operators who deliberately want prompt-side drops.
+        prefill_moe_ctx = (
+            {"capacity": prefill_capacity_tokens, "dispatch": "grouped"}
+            if cfg.has_moe
+            else None
+        )
 
-        self._prefill_jit = jax.jit(_prefill)
+        # admission pipeline (tentpole): all prompt work goes through the
+        # PrefillWorker — "pipelined" overlaps it with decode via the slot
+        # state machine, "blocking" drains it synchronously per request and
+        # charges the decode clock (the legacy schedule).  Sharing one worker
+        # keeps the two admission modes' numerics identical by construction
+        # (same chunking, same jitted programs), so token streams are
+        # bit-equal across admission modes, not just across executors.
+        if admission is None:
+            admission = "pipelined" if n_prefill else "blocking"
+        if admission not in ("blocking", "pipelined"):
+            raise ValueError(f"unknown admission mode: {admission}")
+        self.admission = admission
+        self._ready: List[PrefillEvent] = []
+        prefill_devices = list(pools.prefill_devices) if pools is not None else []
+        worker_extra = self.extra_builder(1) if self.extra_builder else None
+        if prefill_moe_ctx is not None:
+            worker_extra = dict(worker_extra or {})
+            worker_extra["moe_ctx"] = prefill_moe_ctx
+        # under a modeled decode clock with no prefill model, prefill is free
+        # (legacy semantics) — never mix wall-clock stamps into a modeled
+        # timeline, or activation times become meaningless hybrids
+        worker_time_fn = prefill_time_fn
+        if step_time_fn is not None and prefill_time_fn is None:
+            worker_time_fn = lambda n_tok: 0.0
+        self.prefill_worker = PrefillWorker(
+            cfg, params, prefill_devices,
+            cache_len=cache_len, chunk=prefill_chunk,
+            extra=worker_extra, prefill_time_fn=worker_time_fn,
+        )
 
     # ------------------------------------------------------------------
+    # admission
+    # ------------------------------------------------------------------
     def _prefill_request(self, req: Request) -> None:
-        slot = self.slots.admit(req)
-        prompt = req.prompt
-        if prompt is None:
-            rng = np.random.default_rng(req.rid)
-            prompt = rng.integers(0, self.cfg.vocab_size, size=req.input_len, dtype=np.int32)
-        toks = jnp.asarray(prompt, jnp.int32)[None, :]
-        extra = self.extra_builder(1) if self.extra_builder else None
-        t0 = time.perf_counter()
-        logits, one_caches = self._prefill_jit(self.params, toks, extra)
-        logits.block_until_ready()
-        dt = time.perf_counter() - t0
-        if self.disagg is not None:
-            self.disagg.scatter_prefill(one_caches, slot)
-        else:
-            self.caches = scatter_prefill_caches(self.caches, one_caches, slot)
-        first = int(np.argmax(np.asarray(logits[0])))
-        self.tokens = self.tokens.at[slot, 0].set(first)
-        self.clock += dt if self.step_time_fn is None else 0.0
+        """Blocking admission: drain the prefill worker synchronously for this
+        one request — the legacy schedule (the decode loop stalls for the
+        whole prompt), with the same chunked compute as the pipelined path."""
+        stalled = self.slots.num_active > 0
+        slot = self.slots.reserve(req)
+        self.slots.start_prefill(slot)
+        now = max(self.clock, req.arrival)
+        self.prefill_worker.submit(req, slot, now=now)
+        events: List[PrefillEvent] = []
+        while not events:
+            events = self.prefill_worker.poll(self._chunk_sink)
+        ev = events[0]
+        # legacy clock semantics: modeled prefill time when calibrated, wall
+        # otherwise (zero under a modeled decode clock with no prefill model —
+        # the worker's time_fn is already pinned to 0 for that combination)
+        dt = ev.finish_t - now
+        self.slots.activate(slot)
+        self.tokens = self.tokens.at[slot, 0].set(ev.first_token)
+        self.clock += dt
+        if stalled:
+            self.decode_stall_time += dt
         req.prefill_done = self.clock
         req.token_times.append(self.clock)
+        req.tokens_out = [ev.first_token]
+
+    def _submit_request(self, req: Request) -> None:
+        """Pipelined admission: reserve the slot, queue the prompt for the
+        prefill pool — the decode clock is never charged."""
+        slot = self.slots.reserve(req)
+        self.slots.start_prefill(slot)
+        self.prefill_worker.submit(req, slot, now=max(self.clock, req.arrival))
+
+    def _chunk_sink(self, slot: int, start: int, length: int, one_caches: Dict) -> None:
+        """Land one streamed prefill chunk (or a whole-prompt fallback cache,
+        ``length == -1``) in the decode-side caches."""
+        if self.disagg is not None:
+            if length < 0:
+                self.disagg.scatter_prefill(one_caches, slot)
+            else:
+                self.disagg.scatter_prefill_chunk(one_caches, slot, start, length)
+        elif length < 0:
+            self.caches = scatter_prefill_caches(self.caches, one_caches, slot)
+        else:
+            self.caches = scatter_prefill_chunk_caches(
+                self.caches, one_caches, slot, start, length
+            )
+
+    def _poll_prefill(self) -> None:
+        """Advance the prefill pipeline and activate any finished requests
+        whose completion stamp the decode clock has passed."""
+        self._ready.extend(self.prefill_worker.poll(self._chunk_sink))
+        still: List[PrefillEvent] = []
+        for ev in self._ready:
+            if ev.finish_t <= self.clock:
+                self.slots.activate(ev.slot)
+                self.tokens = self.tokens.at[ev.slot, 0].set(ev.first_token)
+                ev.req.prefill_done = ev.finish_t
+                ev.req.token_times.append(ev.finish_t)
+                ev.req.tokens_out = [ev.first_token]
+            else:
+                still.append(ev)
+        self._ready = still
+
+    def _prefill_pending(self) -> int:
+        return self.prefill_worker.num_pending + len(self._ready)
 
     # ------------------------------------------------------------------
     def _decode_iteration(self) -> None:
@@ -185,7 +306,11 @@ class ServingEngine:
             req.token_times.append(self.clock)
             self.slots.advance(s)
             new = new.at[s, 0].set(int(next_tokens[s]))
+            if req.tokens_out is not None:
+                req.tokens_out.append(int(next_tokens[s]))
             if req.generated >= req.output_len or self.slots.positions[s] >= self.cache_len - 2:
+                if req.generated < req.output_len:
+                    req.truncated = True  # context exhausted before target length
                 req.finished = self.clock
                 self.completed.append(self.slots.release(s))
         self.tokens = new
@@ -195,11 +320,21 @@ class ServingEngine:
         """Serve all requests (arrivals gated by the engine clock)."""
         waiting = sorted(requests, key=lambda r: r.arrival)
         steps = 0
-        while (waiting or self.slots.num_active) and steps < max_steps:
+        while (waiting or self.slots.num_active or self._prefill_pending()) and steps < max_steps:
             # admit arrived requests into free slots
             while waiting and waiting[0].arrival <= self.clock and self.slots.free_slots:
-                self._prefill_request(waiting.pop(0))
+                req = waiting.pop(0)
+                if self.admission == "pipelined":
+                    self._submit_request(req)
+                else:
+                    self._prefill_request(req)
+            self._poll_prefill()
             if self.slots.num_active == 0:
+                if self._ready:  # idle: jump to the next prefill completion
+                    self.clock = max(self.clock, min(ev.finish_t for ev in self._ready))
+                    continue
+                if self._prefill_pending():  # chunks still streaming: keep polling
+                    continue
                 if waiting:  # idle: jump to next arrival
                     self.clock = max(self.clock, waiting[0].arrival)
                     continue
@@ -214,23 +349,34 @@ class ServingEngine:
         n_attn: Optional[int] = None,
         n_moe: Optional[int] = None,
         layout: Optional[ReplicaLayout] = None,
+        n_prefill: Optional[int] = None,
     ) -> Dict[str, bool]:
-        """Actuate a scaling decision mid-run (§3.5): only the pool whose
-        count changed is re-lowered; in-flight KV caches are preserved.
+        """Actuate a scaling decision mid-run (§3.5): only the pools whose
+        counts changed are re-lowered; in-flight KV caches are preserved and
+        in-progress chunked prefills migrate with the prefill pool.
         Disagg executor only — the monolithic engine re-lowers wholesale."""
-        if self.disagg is not None:
-            relower = self.disagg.reconfigure(n_attn=n_attn, n_moe=n_moe, layout=layout)
-            self.layout = self.disagg.layout
-            return relower
-        raise NotImplementedError(
-            "mid-run reconfigure requires executor='disagg' (the monolithic "
-            "engine re-lowers wholesale — rebuild the engine instead)"
+        if self.disagg is None:
+            raise NotImplementedError(
+                "mid-run reconfigure requires executor='disagg' (the monolithic "
+                "engine re-lowers wholesale — rebuild the engine instead)"
+            )
+        relower = self.disagg.reconfigure(
+            n_attn=n_attn, n_moe=n_moe, layout=layout, n_prefill=n_prefill
         )
+        self.layout = self.disagg.layout
+        if relower.get("prefill"):
+            self.prefill_worker.set_devices(
+                self.disagg.pools.prefill_devices, self.params
+            )
+        return relower
 
     # ------------------------------------------------------------------
     def metrics(self) -> Dict:
         done = self.completed
         out: Dict = {"completed": len(done), "tokens": sum(r.generated for r in done)}
+        out["truncated"] = sum(1 for r in done if r.truncated)
+        out["decode_stall_time"] = self.decode_stall_time
+        out["prefill_chunks"] = self.prefill_worker.chunks_done
         # disaggregated-exchange telemetry (satellite of amax_log): which
         # two-phase regime served each step, and the bytes it moved
         if self.regime_log:
@@ -246,6 +392,12 @@ class ServingEngine:
             out["amax_max"] = int(np.max(self.amax_log))
         if not done:
             return out
+        # TTFT: prompt turnaround (arrival → first token) — the metric the
+        # prefill pool exists to improve; TPOT alone can't see prefill wins
+        ttfts = np.array([r.prefill_done - r.arrival for r in done if r.prefill_done >= 0])
+        if len(ttfts):
+            out["ttft_mean"] = float(ttfts.mean())
+            out["ttft_p99"] = float(np.percentile(ttfts, 99))
         gaps = np.concatenate(
             [np.diff(r.token_times) for r in done if len(r.token_times) > 1]
         )

@@ -5,6 +5,17 @@ The engine holds model caches with a fixed ``max_batch`` of request slots
 per-slot positions; a freed slot is immediately reusable because attention
 masks are position-bounded per request.
 
+Slot lifecycle (pipelined admission, prefill-pool disaggregation)::
+
+    FREE ──reserve──▶ RESERVED ──start_prefill──▶ PREFILLING ──activate──▶ ACTIVE
+      ▲                                                                      │
+      └────────────────────────────── release ◀──────────────────────────────┘
+
+``admit`` is the legacy blocking path: FREE → ACTIVE in one call.  Reserved
+and prefilling slots are *owned* (not free) but not decoded: the decode loop
+only batches ACTIVE slots, so a request whose prompt is still streaming in
+chunk-by-chunk never corrupts (or stalls) the in-flight batch.
+
 Inactive slots park their write position at ``cache_len - 1`` (a reserved
 scratch entry no live context may reach), so the batched decode step can run
 unconditionally without corrupting live entries.
@@ -21,6 +32,11 @@ import numpy as np
 
 from repro.serving.request import Request
 
+FREE = "free"
+RESERVED = "reserved"
+PREFILLING = "prefilling"
+ACTIVE = "active"
+
 
 @dataclasses.dataclass
 class SlotManager:
@@ -29,29 +45,53 @@ class SlotManager:
 
     def __post_init__(self):
         self.slot_req: List[Optional[Request]] = [None] * self.max_batch
+        self.state: List[str] = [FREE] * self.max_batch
         self.positions = np.full(self.max_batch, self.cache_len - 1, np.int32)
 
     @property
     def free_slots(self) -> List[int]:
-        return [i for i, r in enumerate(self.slot_req) if r is None]
+        return [i for i, s in enumerate(self.state) if s == FREE]
 
     @property
     def active_slots(self) -> List[int]:
-        return [i for i, r in enumerate(self.slot_req) if r is not None]
+        return [i for i, s in enumerate(self.state) if s == ACTIVE]
+
+    @property
+    def pending_slots(self) -> List[int]:
+        """Slots owned by a request whose prefill has not finished."""
+        return [i for i, s in enumerate(self.state) if s in (RESERVED, PREFILLING)]
 
     @property
     def num_active(self) -> int:
         return len(self.active_slots)
 
+    # -- legacy blocking admission: FREE → ACTIVE in one call ----------------
     def admit(self, req: Request) -> int:
+        s = self.reserve(req)
+        self.activate(s)
+        return s
+
+    # -- pipelined admission -------------------------------------------------
+    def reserve(self, req: Request) -> int:
         free = self.free_slots
         if not free:
             raise RuntimeError("no free slot")
         s = free[0]
         self.slot_req[s] = req
+        self.state[s] = RESERVED
         req.slot = s
-        self.positions[s] = req.input_len
         return s
+
+    def start_prefill(self, slot: int) -> None:
+        if self.state[slot] != RESERVED:
+            raise RuntimeError(f"slot {slot} is {self.state[slot]}, expected {RESERVED}")
+        self.state[slot] = PREFILLING
+
+    def activate(self, slot: int) -> None:
+        if self.state[slot] not in (RESERVED, PREFILLING):
+            raise RuntimeError(f"slot {slot} is {self.state[slot]}, cannot activate")
+        self.state[slot] = ACTIVE
+        self.positions[slot] = self.slot_req[slot].input_len
 
     def advance(self, slot: int) -> None:
         self.positions[slot] += 1
@@ -59,6 +99,7 @@ class SlotManager:
     def release(self, slot: int) -> Request:
         req = self.slot_req[slot]
         self.slot_req[slot] = None
+        self.state[slot] = FREE
         self.positions[slot] = self.cache_len - 1
         return req
 
@@ -66,7 +107,7 @@ class SlotManager:
         return jnp.asarray(self.positions)
 
     def active_mask(self) -> np.ndarray:
-        return np.array([r is not None for r in self.slot_req])
+        return np.array([s == ACTIVE for s in self.state])
 
 
 def scatter_prefill_caches(
@@ -83,4 +124,37 @@ def scatter_prefill_caches(
             out[k] = batch_caches[k].at[slot].set(v[0])
         else:
             out[k] = batch_caches[k].at[:, slot].set(v[:, 0])
+    return out
+
+
+def chunk_rows(cache_len: int, start: int, length: int) -> np.ndarray:
+    """Position-axis rows holding prompt positions ``[start, start+length)``
+    in a cache of ``cache_len`` entries.  Contiguous ``start..start+length-1``
+    for full-length caches; rolling-window caches (``cache_len`` < prompt)
+    store position ``p`` at slot ``p % cache_len``, so rows wrap."""
+    return (start + np.arange(length)) % cache_len
+
+
+def scatter_prefill_chunk_caches(
+    batch_caches: Dict[str, jax.Array],
+    one_caches: Dict[str, jax.Array],
+    slot: int,
+    start: int,
+    length: int,
+) -> Dict[str, jax.Array]:
+    """Stream one prefill chunk's KV slab into slot ``slot``: the rows
+    holding prompt positions ``[start, start+length)`` of the per-request
+    caches overwrite the same rows of the batched caches (per-cache
+    :func:`chunk_rows` mapping — rolling-window caches wrap).  This is the
+    per-chunk hand-off of the prefill→decode pipeline — position-indexed KV
+    keys only (recurrent / encoder state has no position axis and moves with
+    the *final* chunk via :func:`scatter_prefill_caches`)."""
+    out = dict(batch_caches)
+    for k, v in one_caches.items():
+        if not k.startswith("kv_"):
+            continue
+        rows = chunk_rows(v.shape[2], start, length)  # [L, 1, S, ...] axis 2
+        out[k] = batch_caches[k].at[:, slot, rows].set(
+            v[:, 0, rows].astype(batch_caches[k].dtype)
+        )
     return out

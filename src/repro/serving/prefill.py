@@ -1,0 +1,256 @@
+"""Prefill-pool worker: chunked prompt prefill with streamed KV hand-off.
+
+The third Janus sub-cluster.  :class:`PrefillWorker` owns the prefill
+devices (``DevicePools.prefill_devices``) — each holds a full model replica —
+and drives an admission pipeline that overlaps prompt processing with the
+decode loop instead of stalling it:
+
+* the engine *reserves* a batch slot for an arrived request and submits it
+  here; the request queues until a prefill device is free;
+* the prompt is processed in fixed-size token chunks
+  (:func:`repro.models.transformer.prefill_chunk` — bit-equivalent to
+  whole-prompt prefill under ample expert capacity); architectures without
+  chunked-prefill support (recurrent / encoder-decoder stacks) fall back to
+  one whole-prompt call on the same pool;
+* after every chunk, the chunk's KV slab is streamed into the decode-side
+  batched caches through the engine-provided ``sink`` (mono: a sliced
+  ``scatter_prefill_chunk_caches``; disagg: ``DisaggExecutor
+  .scatter_prefill_chunk`` onto the owning attention shard) — the decode
+  pool sees the cache fill up incrementally, and the hand-off never moves
+  the whole prompt cache in one bulk transfer;
+* when the last chunk lands, the request's first token (greedy over the
+  final chunk's last-position logits) is returned to the engine, which flips
+  the slot ``prefilling → active``.
+
+Timing model: chunks are timed per call (wall clock, or ``prefill_time_fn``
+when the engine runs a modeled clock) and accumulated on a *per-device pool
+timeline* (``busy_until``) that runs concurrently with the engine's decode
+clock — on disjoint hardware the two pools really do overlap; on shared host
+devices the schedule (chunk order, per-device serialisation, completion
+stamps) is the real one even though the arithmetic shares cores.  The engine
+activates a finished request once its clock passes the completion stamp.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as model_mod
+from repro.serving.request import Request
+
+
+@dataclasses.dataclass
+class PrefillEvent:
+    """A finished prefill: returned by :meth:`PrefillWorker.poll`."""
+
+    req: Request
+    slot: int
+    first_token: int
+    finish_t: float  # completion stamp on the prefill-pool timeline
+
+
+@dataclasses.dataclass
+class _InFlight:
+    req: Request
+    slot: int
+    dev_index: int
+    prompt: np.ndarray
+    caches: Optional[Dict[str, jax.Array]] = None  # per-request decode-format caches
+    done: int = 0  # prompt tokens already prefilled
+    ready_t: float = 0.0  # pool-timeline moment the next chunk may start
+
+
+class PrefillWorker:
+    """Chunked prefill over a dedicated device pool + admission queue."""
+
+    def __init__(
+        self,
+        cfg,
+        params,
+        devices: Optional[Sequence[jax.Device]] = None,
+        *,
+        cache_len: int,
+        chunk: int = 64,
+        extra: Optional[Dict] = None,
+        prefill_time_fn: Optional[Callable[[int], float]] = None,
+        max_chunks_per_poll: int = 1,
+    ):
+        self.cfg = cfg
+        self.cache_len = cache_len
+        self.chunk = max(1, int(chunk))
+        if getattr(cfg, "sliding_window", None):
+            # windowed layers attend [cache ⊕ chunk]: a chunk larger than the
+            # rolling window would overwrite keys its own queries still need
+            self.chunk = min(self.chunk, min(cache_len, cfg.sliding_window))
+        self.extra = extra
+        self.prefill_time_fn = prefill_time_fn
+        self.max_chunks_per_poll = max(1, int(max_chunks_per_poll))
+        self.chunked = model_mod.supports_chunked_prefill(cfg)
+        self.chunks_done = 0
+        self.set_devices(devices, params)
+
+        def _call_extra(n_tokens: int):
+            """Drop-free MoE capacity by default: a ``None`` capacity becomes
+            the call's own token count (an expert can receive at most that
+            many tokens), so chunked and whole-prompt prefill both see zero
+            drops — the regime where they are bit-equivalent.  ``n_tokens``
+            is a static trace-time shape, so this costs no retraces."""
+            extra = self.extra
+            mc = (extra or {}).get("moe_ctx")
+            if mc is not None and mc.get("capacity") is None:
+                extra = dict(extra)
+                extra["moe_ctx"] = dict(mc, capacity=n_tokens)
+            return extra
+
+        def _chunk_fn(p, toks, caches, start):
+            return model_mod.prefill_chunk(
+                p, toks, caches, start, cfg, extra=_call_extra(toks.shape[1])
+            )
+
+        def _full_fn(p, toks):
+            return model_mod.prefill(
+                p, toks, cfg, self.cache_len, extra=_call_extra(toks.shape[1])
+            )
+
+        self._chunk_jit = jax.jit(_chunk_fn)
+        self._full_jit = jax.jit(_full_fn)
+
+        self._queue: List[_InFlight] = []
+        self._current: List[Optional[_InFlight]] = [None] * len(self.devices)
+
+    # ------------------------------------------------------------------
+    # pool membership (reconfigure support)
+    # ------------------------------------------------------------------
+    def set_devices(self, devices: Optional[Sequence[jax.Device]], params) -> None:
+        """(Re-)place the full-model replica on every pool device.  With an
+        empty pool the worker degrades to the default device (prefill is then
+        co-located with decode — the pre-disaggregation layout).  In-flight
+        per-request caches migrate with their device index, so a mid-prefill
+        pool resize never loses chunk progress."""
+        devs = list(devices or [])
+        if not devs:
+            devs = [jax.devices()[0]]
+        self.devices = devs
+        self._params = [jax.device_put(params, d) for d in devs]
+        # pool timeline survives a resize: a surviving device keeps the time
+        # it already claimed (new devices start idle, which is exact)
+        old_busy = getattr(self, "busy_until", [])
+        self.busy_until = [
+            old_busy[i] if i < len(old_busy) else 0.0 for i in range(len(devs))
+        ]
+        cur = getattr(self, "_current", None)
+        if cur:  # migrate in-flight work into the resized pool
+            carry = [e for e in cur if e is not None]
+            self._current = [None] * len(devs)
+            for e in carry:
+                e.dev_index = min(e.dev_index, len(devs) - 1)
+                if e.caches is not None:
+                    e.caches = jax.device_put(e.caches, devs[e.dev_index])
+                if self._current[e.dev_index] is None:
+                    self._current[e.dev_index] = e
+                else:
+                    self._queue.insert(0, e)
+
+    # ------------------------------------------------------------------
+    # admission
+    # ------------------------------------------------------------------
+    def submit(self, req: Request, slot: int, now: float) -> None:
+        """Queue a reserved request for prefill (FIFO)."""
+        prompt = req.prompt
+        if prompt is None:
+            rng = np.random.default_rng(req.rid)
+            prompt = rng.integers(0, self.cfg.vocab_size, size=req.input_len, dtype=np.int32)
+        self._queue.append(_InFlight(req, slot, -1, np.asarray(prompt, np.int32), ready_t=now))
+
+    @property
+    def num_pending(self) -> int:
+        return len(self._queue) + sum(e is not None for e in self._current)
+
+    # ------------------------------------------------------------------
+    # the pipeline: one poll = at most ``max_chunks_per_poll`` chunks/device
+    # ------------------------------------------------------------------
+    def poll(self, sink: Callable[[int, int, int, Dict], None]) -> List[PrefillEvent]:
+        """Advance prefill work and stream finished chunks through ``sink``.
+
+        ``sink(slot, start, length, one_caches)`` lands the chunk's KV rows
+        in the decode-side caches (``start``/``length`` index the position
+        axis; ``length == -1`` marks a whole-prompt fallback cache).  Returns
+        the requests whose prefill finished this poll, stamped with their
+        pool-timeline completion times.
+        """
+        events: List[PrefillEvent] = []
+        for di in range(len(self.devices)):
+            if self._current[di] is None and self._queue:
+                entry = self._queue.pop(0)
+                if entry.caches is not None and entry.dev_index != di:
+                    # a resize-displaced entry resumes on a different device:
+                    # its partial caches must follow (params live per device)
+                    entry.caches = jax.device_put(entry.caches, self.devices[di])
+                entry.dev_index = di
+                self._current[di] = entry
+            entry = self._current[di]
+            if entry is None:
+                continue
+            for _ in range(self.max_chunks_per_poll):
+                ev = self._advance(entry, sink)
+                if ev is not None:
+                    events.append(ev)
+                    self._current[di] = None
+                    break
+        return events
+
+    def _advance(self, entry: _InFlight, sink) -> Optional[PrefillEvent]:
+        dev = self.devices[entry.dev_index]
+        params = self._params[entry.dev_index]
+        n = len(entry.prompt)
+        if not self.chunked:
+            # whole-prompt fallback (recurrent / enc-dec stacks): one call on
+            # the pool device, one bulk hand-off
+            toks = jax.device_put(jnp.asarray(entry.prompt)[None, :], dev)
+            t0 = time.perf_counter()
+            logits, caches = self._full_jit(params, toks)
+            logits.block_until_ready()
+            dt = self.prefill_time_fn(n) if self.prefill_time_fn else time.perf_counter() - t0
+            sink(entry.slot, 0, -1, caches)
+            return self._finish(entry, logits, dt)
+
+        lo = entry.done
+        hi = min(lo + self.chunk, n)
+        if entry.caches is None:
+            entry.caches = jax.device_put(
+                model_mod.init_decode_caches(self.cfg, 1, self.cache_len), dev
+            )
+        toks = jax.device_put(jnp.asarray(entry.prompt[lo:hi])[None, :], dev)
+        t0 = time.perf_counter()
+        logits, entry.caches = self._chunk_jit(params, toks, entry.caches, jnp.int32(lo))
+        logits.block_until_ready()
+        dt = (
+            self.prefill_time_fn(hi - lo)
+            if self.prefill_time_fn
+            else time.perf_counter() - t0
+        )
+        sink(entry.slot, lo, hi - lo, entry.caches)
+        entry.done = hi
+        self.chunks_done += 1
+        if hi < n:
+            # pool-timeline accounting: the chunk starts as soon as both the
+            # device and the request's previous chunk are done — the engine's
+            # decode clock runs concurrently and is never charged
+            start_t = max(self.busy_until[entry.dev_index], entry.ready_t)
+            self.busy_until[entry.dev_index] = entry.ready_t = start_t + dt
+            return None
+        return self._finish(entry, logits, dt)
+
+    def _finish(self, entry: _InFlight, logits, dt: float) -> PrefillEvent:
+        start_t = max(self.busy_until[entry.dev_index], entry.ready_t)
+        finish_t = start_t + dt
+        self.busy_until[entry.dev_index] = finish_t
+        first = int(np.argmax(np.asarray(logits[0])))
+        entry.caches = None  # working copy dropped; KV already streamed out
+        return PrefillEvent(entry.req, entry.slot, first, finish_t)

@@ -21,6 +21,13 @@ class Request:
     generated: int = 0
     token_times: Optional[List[float]] = None
     finished: float = -1.0
+    # context window exhausted before output_len tokens were generated — the
+    # request still completes, but the cut is no longer silent
+    truncated: bool = False
+    # greedy token ids emitted for this request (first token from prefill,
+    # then one per decode step) — lets tests assert bit-identical streams
+    # across executors/admission modes, not just matching counts
+    tokens_out: Optional[List[int]] = None
 
     def tpot_p(self, q: float) -> float:
         """Per-token latency percentile over the decode phase."""
@@ -40,6 +47,17 @@ class WorkloadSpec:
     max_input: int = 512
     max_output: int = 2048
     seed: int = 0
+
+
+def long_prompt_spec(**overrides) -> WorkloadSpec:
+    """Long-prompt preset (document QA / RAG style): heavy-tailed prompts a
+    couple of orders longer than ShareGPT chat turns, short generations.
+    This is the workload where blocking admission collapses — one 4k-token
+    prefill stalls every in-flight decode — and what
+    ``benchmarks/prefill_disagg_bench.py`` drives against the prefill pool."""
+    spec = dict(mean_input=512.0, mean_output=64.0, max_input=4096, max_output=256)
+    spec.update(overrides)
+    return WorkloadSpec(**spec)
 
 
 def sample_requests(

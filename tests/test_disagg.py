@@ -116,7 +116,7 @@ def test_reconfigure_preserves_caches_and_logits(dsv2_setup):
     before = {k: np.asarray(v) for k, v in ex.export_caches().items()}
 
     rel = ex.reconfigure(n_attn=3)
-    assert rel == {"attn": True, "moe": False}
+    assert rel == {"attn": True, "moe": False, "prefill": False}
     after = ex.export_caches()
     for k in before:
         np.testing.assert_array_equal(np.asarray(after[k]), before[k])
@@ -124,12 +124,12 @@ def test_reconfigure_preserves_caches_and_logits(dsv2_setup):
     np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
 
     rel = ex.reconfigure(n_moe=4, layout=ReplicaLayout.round_robin(cfg.num_experts, 4, 2))
-    assert rel == {"attn": False, "moe": True}
+    assert rel == {"attn": False, "moe": True, "prefill": False}
     got, _ = ex.decode_step(tok, positions)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
     assert ex.relower_log == [
-        {"attn": True, "moe": False},
-        {"attn": False, "moe": True},
+        {"attn": True, "moe": False, "prefill": False},
+        {"attn": False, "moe": True, "prefill": False},
     ]
 
 
@@ -237,6 +237,31 @@ def test_pools_anchor_unaffected_side():
     assert [id(d) for d in a.attn_devices] == [id(d) for d in c.attn_devices]
 
 
+def test_pools_three_way_anchoring():
+    """Third sub-cluster anchoring: the prefill pool sits immediately ahead
+    of the (tail-anchored) MoE pool; resizing prefill never relocates either
+    decode pool, and resizing attention never relocates prefill or MoE."""
+
+    class _D:  # distinct sentinel "devices" so identity checks are real
+        pass
+
+    devs = [_D() for _ in range(10)]
+    a = DevicePools.split(2, 4, devices=devs, n_prefill=2)
+    assert a.attn_devices == devs[:2]
+    assert a.moe_devices == devs[-4:]
+    assert a.prefill_devices == devs[4:6]
+    # prefill resize: decode pools anchored
+    b = DevicePools.split(2, 4, devices=devs, n_prefill=3)
+    assert b.attn_devices == a.attn_devices and b.moe_devices == a.moe_devices
+    # attention resize: prefill + MoE anchored
+    c = DevicePools.split(3, 4, devices=devs, n_prefill=2)
+    assert c.prefill_devices == a.prefill_devices and c.moe_devices == a.moe_devices
+    # n_prefill=0 keeps the legacy two-way layout exactly
+    d = DevicePools.split(2, 4, devices=devs)
+    assert d.prefill_devices == [] and d.attn_devices == a.attn_devices
+    assert d.moe_devices == a.moe_devices
+
+
 # ---------------------------------------------------------------------------
 # Engine-level: continuous batching, telemetry, reconfigure
 # ---------------------------------------------------------------------------
@@ -264,6 +289,70 @@ def test_engine_disagg_matches_mono_tokens(dsv2_setup):
             assert set(m["regime_counts"]) <= {"case1", "case2"}
             assert eng.transfer_bytes_log and len(eng.regime_log) == len(eng.amax_log)
     assert outs["mono"] == outs["disagg"] == outs["disagg_pp"]
+
+
+def test_engine_prefill_pool_streams_bit_identical(dsv2_setup):
+    """With the prefill pool enabled (pipelined chunked admission, streamed
+    per-chunk KV hand-off), the continuous-batching greedy token streams are
+    bit-identical to the monolithic blocking engine, and the decode clock is
+    never charged for prompt work."""
+    cfg, params, layout = dsv2_setup
+    streams = {}
+    for name, kw in [
+        ("mono", dict(executor="mono")),
+        ("mono_pipe", dict(executor="mono", n_prefill=1, prefill_chunk=4)),
+        ("disagg_pipe", dict(executor="disagg", n_attn=2, n_prefill=1, prefill_chunk=4)),
+    ]:
+        eng = ServingEngine(cfg, params, max_batch=4, cache_len=64, layout=layout,
+                            scheduler="aebs", capacity_tokens=64, **kw)
+        m = eng.run(_requests(cfg, 5), max_steps=2000)
+        assert m["completed"] == 5
+        streams[name] = {r.rid: r.tokens_out for r in eng.completed}
+        if name == "mono":
+            assert eng.admission == "blocking"
+        else:
+            assert eng.admission == "pipelined"
+            assert m["decode_stall_time"] == 0.0
+            assert m["prefill_chunks"] >= 5  # prompts really went chunk-wise
+            assert m["ttft_mean"] > 0
+        assert all(len(s) > 0 for s in streams[name].values())
+    assert streams["mono"] == streams["mono_pipe"] == streams["disagg_pipe"]
+
+
+def test_engine_reconfigure_prefill_pool(dsv2_setup):
+    """Scaling the prefill pool mid-run re-lowers only the prefill side and
+    leaves served tokens identical; the AutoScaler can drive it from its own
+    prompt-token demand signal."""
+    from repro.core.scaling import EvalResult, PerfModel
+    from repro.serving.controller import AutoScaler
+
+    cfg, params, layout = dsv2_setup
+    eng = ServingEngine(cfg, params, max_batch=4, cache_len=64, layout=layout,
+                        scheduler="aebs", capacity_tokens=64,
+                        executor="disagg", n_attn=2, n_prefill=1, prefill_chunk=4)
+    eng.run(_requests(cfg, 3, seed=1), max_steps=2000)
+    rel = eng.reconfigure(n_prefill=2)
+    assert rel == {"attn": False, "moe": False, "prefill": True}
+    assert len(eng.disagg.pools.prefill_devices) == 2
+    assert len(eng.prefill_worker.devices) == 2
+    m = eng.run(_requests(cfg, 3, seed=2), max_steps=2000)
+    assert m["completed"] == 6
+
+    # controller path: prefill demand sizes the pool independently
+    ctrl = AutoScaler(PerfModel(cfg, slots_per_instance=3, s_ctx=64), slo=0.2,
+                      prefill_tok_rate=100.0)
+    decision = EvalResult(n_a=2, n_e=2, batch=4, tpot=0.1, t_attn=0, t_moe=0,
+                          t_comm=0, a_max=1, tpg=1.0, feasible=True)
+    ctrl.scaler.scale = lambda lam, slo: decision  # pin the decode decision
+    for t, n_in in [(0.0, 120.0), (1.0, 150.0)]:
+        ctrl.observe(t, 16.0, input_tokens=n_in)
+    n_p = ctrl.decide_prefill(now=2.0, demand=250.0)
+    assert n_p == 3  # ceil(250 / 100)
+    ctrl.actuate(eng, now=2.0)
+    assert ctrl.events[-1].n_p is not None
+    assert len(eng.disagg.pools.prefill_devices) == ctrl.events[-1].n_p
+    m = eng.run(_requests(cfg, 2, seed=9), max_steps=2000)
+    assert m["completed"] == 8
 
 
 def test_engine_reconfigure_mid_run(dsv2_setup):
@@ -314,7 +403,7 @@ def test_controller_actuates_reconfigure(dsv2_setup):
     best = ctrl.actuate(eng, now=0.0)
     assert (best.n_a, best.n_e) == (3, 2)
     assert len(eng.disagg.pools.attn_devices) == 3
-    assert eng.disagg.relower_log[-1] == {"attn": True, "moe": False}
+    assert eng.disagg.relower_log[-1] == {"attn": True, "moe": False, "prefill": False}
     m = eng.run(_requests(cfg, 2, seed=9), max_steps=2000)
     assert m["completed"] == 5
 
@@ -353,19 +442,25 @@ def reqs():
 
 outs = {}
 for name, kw in [("mono", dict(executor="mono")),
-                 ("disagg", dict(executor="disagg", n_attn=2))]:
+                 ("disagg", dict(executor="disagg", n_attn=2)),
+                 ("disagg_prefill", dict(executor="disagg", n_attn=2,
+                                         n_prefill=2, prefill_chunk=3))]:
     eng = ServingEngine(cfg, params, max_batch=4, cache_len=32, layout=layout,
                         scheduler="aebs", capacity_tokens=64, **kw)
     m = eng.run(reqs(), max_steps=500)
     assert m["completed"] == 4, m
-    outs[name] = {r.rid: r.generated for r in eng.completed}
-    if name == "disagg":
+    outs[name] = {r.rid: tuple(r.tokens_out) for r in eng.completed}
+    if name != "mono":
         # the pools must be real, disjoint devices
         ds = eng.disagg.pools
-        assert len({d.id for d in ds.attn_devices + ds.moe_devices}) == 4
+        n_p = len(ds.prefill_devices)
+        assert len({d.id for d in ds.attn_devices + ds.moe_devices
+                    + ds.prefill_devices}) == 4 + n_p
         assert m["regime_counts"] and m["transfer_bytes_total"] > 0
-assert outs["mono"] == outs["disagg"], outs
-print("DISAGG_OK", outs["disagg"])
+    if name == "disagg_prefill":
+        assert m["prefill_chunks"] >= 4 and m["decode_stall_time"] == 0.0
+assert outs["mono"] == outs["disagg"] == outs["disagg_prefill"], outs
+print("DISAGG_OK", {k: len(v) for k, v in outs["disagg"].items()})
 """
 
 

@@ -1,0 +1,141 @@
+"""Direct unit tests for the slot/cache substrate: ``SlotManager`` lifecycle
+(including the pipelined-admission reserved/prefilling states) and the
+prefill scatter helpers (whole-prompt and streamed per-chunk), which the
+engine tests only exercise indirectly."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving.kv_cache import (
+    ACTIVE,
+    FREE,
+    PREFILLING,
+    RESERVED,
+    SlotManager,
+    scatter_prefill_caches,
+    scatter_prefill_chunk_caches,
+)
+from repro.serving.request import Request
+
+
+def _req(rid, input_len=4):
+    return Request(rid=rid, arrival=0.0, input_len=input_len, output_len=8,
+                   token_times=[])
+
+
+# ---------------------------------------------------------------------------
+# SlotManager lifecycle
+# ---------------------------------------------------------------------------
+
+
+def test_slot_admit_advance_release_reuse():
+    sm = SlotManager(max_batch=2, cache_len=16)
+    assert sm.free_slots == [0, 1] and sm.num_active == 0
+    r0 = _req(0, input_len=5)
+    s = sm.admit(r0)
+    assert s == 0 and r0.slot == 0
+    assert sm.state[0] == ACTIVE and sm.positions[0] == 5
+    sm.advance(0)
+    assert sm.positions[0] == 6
+    back = sm.release(0)
+    assert back is r0
+    assert sm.state[0] == FREE and sm.positions[0] == 15  # parked at scratch
+    # freed slot is immediately reusable
+    r1 = _req(1, input_len=2)
+    assert sm.admit(r1) == 0 and sm.positions[0] == 2
+
+
+def test_slot_reserved_prefilling_lifecycle():
+    sm = SlotManager(max_batch=3, cache_len=32)
+    r = _req(7, input_len=9)
+    s = sm.reserve(r)
+    assert sm.state[s] == RESERVED
+    # reserved slots are owned (not free) but not decoded
+    assert s not in sm.free_slots and s not in sm.active_slots
+    assert sm.pending_slots == [s]
+    assert sm.positions[s] == 31  # still parked: decode writes only scratch
+    sm.start_prefill(s)
+    assert sm.state[s] == PREFILLING and sm.pending_slots == [s]
+    assert not sm.active_mask()[s]
+    sm.activate(s)
+    assert sm.state[s] == ACTIVE and sm.positions[s] == 9
+    assert sm.pending_slots == [] and sm.active_slots == [s]
+    sm.release(s)
+    assert sm.state[s] == FREE
+
+
+def test_slot_invalid_transitions_raise():
+    sm = SlotManager(max_batch=1, cache_len=16)
+    r = _req(0)
+    sm.reserve(r)
+    with pytest.raises(RuntimeError, match="no free slot"):
+        sm.reserve(_req(1))
+    sm.start_prefill(0)
+    with pytest.raises(RuntimeError, match="expected reserved"):
+        sm.start_prefill(0)  # already prefilling
+    sm.activate(0)
+    with pytest.raises(RuntimeError, match="cannot activate"):
+        sm.activate(0)  # already active
+
+
+# ---------------------------------------------------------------------------
+# scatter helpers
+# ---------------------------------------------------------------------------
+
+
+def _batch_caches(L=2, B=3, S=8, H=2, D=4):
+    return {
+        "kv_k": jnp.zeros((L, B, S, H, D), jnp.float32),
+        "kv_v": jnp.zeros((L, B, S, H, D), jnp.float32),
+        "enc_out": jnp.zeros((B, 5, 6), jnp.float32),
+    }
+
+
+def _one_caches(L=2, S=8, H=2, D=4, fill=1.0):
+    return {
+        "kv_k": jnp.full((L, 1, S, H, D), fill, jnp.float32),
+        "kv_v": jnp.full((L, 1, S, H, D), 2 * fill, jnp.float32),
+        "enc_out": jnp.full((1, 5, 6), 3 * fill, jnp.float32),
+    }
+
+
+def test_scatter_prefill_caches_axes():
+    """Stacked caches scatter on batch axis 1; ``enc_out`` on axis 0."""
+    out = scatter_prefill_caches(_batch_caches(), _one_caches(), slot=1)
+    for k, ax in [("kv_k", 1), ("kv_v", 1)]:
+        got = np.asarray(out[k])
+        assert (got[:, 1] != 0).all()
+        assert (got[:, [0, 2]] == 0).all(), k
+    enc = np.asarray(out["enc_out"])
+    assert (enc[1] == 3.0).all() and (enc[[0, 2]] == 0).all()
+
+
+def test_scatter_prefill_chunk_rows():
+    """Per-chunk streaming writes only the chunk's position rows of the one
+    target slot, leaves every other row/slot untouched, and skips non-KV
+    entries (they move with the final whole-prompt hand-off)."""
+    batch = _batch_caches()
+    one = _one_caches()
+    out = scatter_prefill_chunk_caches(batch, one, slot=2, start=3, length=4)
+    for k in ("kv_k", "kv_v"):
+        got = np.asarray(out[k])
+        assert (got[:, 2, 3:7] != 0).all(), k  # the chunk landed
+        assert (got[:, 2, :3] == 0).all() and (got[:, 2, 7:] == 0).all()
+        assert (got[:, [0, 1]] == 0).all()  # other slots untouched
+    assert (np.asarray(out["enc_out"]) == 0).all()  # non-KV ignored
+
+
+def test_scatter_chunks_compose_to_whole_prompt():
+    """Streaming a prompt chunk-by-chunk composes to exactly the bulk
+    whole-prompt scatter (over the prompt's rows)."""
+    one = _one_caches()
+    # give rows distinct values so ordering errors show
+    one = {k: v * jnp.arange(1, v.shape[2] + 1, dtype=jnp.float32)[None, None, :, None, None]
+           if k != "enc_out" else v for k, v in one.items()}
+    bulk = scatter_prefill_caches(_batch_caches(), one, slot=0)
+    streamed = _batch_caches()
+    for start, length in [(0, 3), (3, 3), (6, 2)]:
+        streamed = scatter_prefill_chunk_caches(streamed, one, 0, start, length)
+    for k in ("kv_k", "kv_v"):
+        np.testing.assert_array_equal(np.asarray(streamed[k]), np.asarray(bulk[k]))

@@ -1,0 +1,273 @@
+"""Chunked prefill + the prefill-pool worker.
+
+Model level: iterated ``prefill_chunk`` must reproduce whole-prompt
+``prefill`` bit-exactly (caches and last-token logits) for attention+FFN
+stacks — that equivalence is what lets the prefill pool stream KV chunks
+into live decode caches without touching decode numerics.
+
+Worker level: the admission pipeline (queue → per-device chunk streaming →
+completion stamps on the concurrent pool timeline) and the whole-prompt
+fallback for non-chunkable architectures.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model as model_mod
+from repro.serving.kv_cache import scatter_prefill_caches, scatter_prefill_chunk_caches
+from repro.serving.prefill import PrefillWorker
+from repro.serving.request import Request
+
+
+@pytest.fixture(scope="module")
+def dsv2():
+    cfg = get_config("dsv2-lite-reduced")
+    return cfg, model_mod.init_params(cfg, 0)
+
+
+def _run_chunked(cfg, params, toks, cache_len, chunk, extra=None):
+    caches = model_mod.init_decode_caches(cfg, toks.shape[0], cache_len)
+    logits = None
+    pos = 0
+    while pos < toks.shape[1]:
+        c = min(chunk, toks.shape[1] - pos)
+        logits, caches = model_mod.prefill_chunk(
+            params, toks[:, pos : pos + c], caches, jnp.int32(pos), cfg, extra=extra
+        )
+        pos += c
+    return logits, caches
+
+
+# ---------------------------------------------------------------------------
+# model level: bit-equivalence with whole-prompt prefill
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("chunk", [1, 4, 5, 13, 32])
+def test_chunked_prefill_matches_whole_prompt_exactly(dsv2, chunk):
+    """Any chunking of the prompt (even ragged tails) produces bit-identical
+    caches and last-token logits to one whole-prompt prefill call."""
+    cfg, params = dsv2
+    S, CL = 13, 32
+    toks = jax.random.randint(jax.random.PRNGKey(0), (1, S), 0, cfg.vocab_size)
+    extra = {"moe_ctx": {"capacity": 64}}  # ample: no capacity drops either way
+    want_logits, want = model_mod.prefill(params, toks, cfg, cache_len=CL, extra=extra)
+    got_logits, got = _run_chunked(cfg, params, toks, CL, chunk, extra=extra)
+    for k in want:
+        np.testing.assert_array_equal(np.asarray(got[k]), np.asarray(want[k]), err_msg=k)
+    np.testing.assert_array_equal(np.asarray(got_logits), np.asarray(want_logits))
+
+
+@pytest.mark.parametrize(
+    "S,CL,chunk",
+    [
+        (12, 32, 5),    # prompt inside the window, ragged chunks
+        (100, 128, 16), # prompt wraps the 64-token rolling window
+        (100, 128, 7),  # wrap + chunks straddling the wrap point
+    ],
+)
+def test_chunked_prefill_sliding_window_arch(S, CL, chunk):
+    """dense_local layers (rolling-window KV layout) chunk correctly,
+    including prompts *longer than the window* — the regime where the rolling
+    buffer wraps, slot indices diverge from absolute positions, and a chunk's
+    own keys overwrite predecessors its earlier queries still need (attended
+    from the fresh segment, never the overwritten slot)."""
+    cfg = get_config("gemma2-2b-reduced")
+    params = model_mod.init_params(cfg, 0)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, S), 0, cfg.vocab_size)
+    want_logits, want = model_mod.prefill(params, toks, cfg, cache_len=CL)
+    got_logits, got = _run_chunked(cfg, params, toks, CL, chunk=chunk)
+    for k in want:
+        np.testing.assert_array_equal(np.asarray(got[k]), np.asarray(want[k]), err_msg=k)
+    np.testing.assert_array_equal(np.asarray(got_logits), np.asarray(want_logits))
+
+
+def test_chunk_larger_than_window_rejected():
+    """attention_prefill_chunk refuses chunks wider than the rolling window
+    (they would overwrite keys their own queries need); the PrefillWorker
+    clamps its chunk size for windowed stacks instead."""
+    from repro.serving.prefill import PrefillWorker
+
+    cfg = get_config("gemma2-2b-reduced")
+    params = model_mod.init_params(cfg, 0)
+    CL = 128
+    toks = jax.random.randint(jax.random.PRNGKey(0), (1, 100), 0, cfg.vocab_size)
+    with pytest.raises(ValueError, match="must not exceed the window"):
+        _run_chunked(cfg, params, toks, CL, chunk=100)
+    w = PrefillWorker(cfg, params, [], cache_len=CL, chunk=256)
+    assert w.chunk == cfg.sliding_window
+
+
+def test_chunked_prefill_then_decode_consistent(dsv2):
+    """Decode continues seamlessly from chunk-built caches: same tokens as
+    decode from whole-prompt caches."""
+    cfg, params = dsv2
+    S, CL = 9, 32
+    toks = jax.random.randint(jax.random.PRNGKey(2), (1, S + 4), 0, cfg.vocab_size)
+    _, c_whole = model_mod.prefill(params, toks[:, :S], cfg, cache_len=CL)
+    _, c_chunk = _run_chunked(cfg, params, toks[:, :S], CL, chunk=4)
+    for t in range(4):
+        l1, c_whole = model_mod.decode_step(params, toks[:, S + t : S + t + 1], c_whole, jnp.int32(S + t), cfg)
+        l2, c_chunk = model_mod.decode_step(params, toks[:, S + t : S + t + 1], c_chunk, jnp.int32(S + t), cfg)
+        np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+
+
+def test_unsupported_arch_raises():
+    cfg = get_config("falcon-mamba-7b-reduced")
+    assert not model_mod.supports_chunked_prefill(cfg)
+    params = model_mod.init_params(cfg, 0)
+    caches = model_mod.init_decode_caches(cfg, 1, 16)
+    toks = jnp.zeros((1, 4), jnp.int32)
+    with pytest.raises(ValueError, match="chunked prefill"):
+        model_mod.prefill_chunk(params, toks, caches, jnp.int32(0), cfg)
+
+
+def test_kv_quant_configs_fall_back():
+    """Quantised caches can't chunk bit-exactly (earlier chunks would be read
+    through the int8 round-trip while whole-prompt prefill attends raw keys),
+    so they must route through the whole-prompt fallback."""
+    import dataclasses
+
+    cfg = get_config("dsv2-lite-reduced")
+    assert model_mod.supports_chunked_prefill(cfg)
+    qcfg = dataclasses.replace(cfg, kv_quant=True)
+    assert not model_mod.supports_chunked_prefill(qcfg)
+
+
+# ---------------------------------------------------------------------------
+# worker level: pipeline, streaming sink, pool timeline
+# ---------------------------------------------------------------------------
+
+
+def _mk_req(rid, prompt):
+    return Request(rid=rid, arrival=0.0, input_len=len(prompt), output_len=4,
+                   prompt=np.asarray(prompt, np.int32), token_times=[])
+
+
+def test_worker_streams_chunks_and_matches_bulk_scatter(dsv2):
+    """Chunks streamed through the sink compose to exactly the bulk
+    whole-prompt scatter, and the completion's first token matches the
+    blocking path's."""
+    cfg, params = dsv2
+    CL, B = 32, 2
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, cfg.vocab_size, size=11, dtype=np.int32)
+    req = _mk_req(0, prompt)
+
+    batch = model_mod.init_decode_caches(cfg, B, CL)
+    state = {"caches": batch, "chunks": []}
+
+    def sink(slot, start, length, one_caches):
+        assert length > 0  # chunked arch: never the bulk fallback
+        state["chunks"].append((start, length))
+        state["caches"] = scatter_prefill_chunk_caches(
+            state["caches"], one_caches, slot, start, length
+        )
+
+    # ample shared capacity: the per-chunk and whole-prompt MoE calls must see
+    # the same (zero) drop behaviour — exactly what ServingEngine wires in
+    extra = {"moe_ctx": {"capacity": 64}}
+    w = PrefillWorker(cfg, params, [], cache_len=CL, chunk=4, extra=extra,
+                      prefill_time_fn=lambda n: 0.01 * n)
+    w.submit(req, slot=1, now=0.0)
+    events = []
+    for _ in range(10):
+        events += w.poll(sink)
+        if events:
+            break
+    assert len(events) == 1 and w.num_pending == 0
+    ev = events[0]
+    assert ev.slot == 1 and ev.finish_t == pytest.approx(0.01 * 11)
+    assert state["chunks"] == [(0, 4), (4, 4), (8, 3)]
+
+    # blocking-path reference
+    logits, one = model_mod.prefill(params, jnp.asarray(prompt)[None, :], cfg,
+                                    cache_len=CL, extra=extra)
+    want = scatter_prefill_caches(model_mod.init_decode_caches(cfg, B, CL), one, 1)
+    for k in want:
+        np.testing.assert_array_equal(np.asarray(state["caches"][k]), np.asarray(want[k]), err_msg=k)
+    assert ev.first_token == int(np.argmax(np.asarray(logits[0])))
+
+
+def test_worker_streams_windowed_arch_past_wrap():
+    """Streaming hand-off on a sliding-window arch with a prompt longer than
+    the window: rolling (`_local`) cache rows wrap (`chunk_rows`), so the
+    streamed result must still equal the bulk whole-prompt scatter."""
+    cfg = get_config("gemma2-2b-reduced")
+    params = model_mod.init_params(cfg, 0)
+    CL, B, S = 128, 2, 100
+    assert S > cfg.sliding_window  # the wrap regime is the point of this test
+    rng = np.random.default_rng(2)
+    prompt = rng.integers(0, cfg.vocab_size, size=S, dtype=np.int32)
+
+    state = {"caches": model_mod.init_decode_caches(cfg, B, CL)}
+
+    def sink(slot, start, length, one_caches):
+        assert length > 0
+        state["caches"] = scatter_prefill_chunk_caches(
+            state["caches"], one_caches, slot, start, length
+        )
+
+    w = PrefillWorker(cfg, params, [], cache_len=CL, chunk=16,
+                      prefill_time_fn=lambda n: 0.01)
+    w.submit(_mk_req(0, prompt), slot=1, now=0.0)
+    events = []
+    while not events:
+        events = w.poll(sink)
+
+    _, one = model_mod.prefill(params, jnp.asarray(prompt)[None, :], cfg, cache_len=CL)
+    want = scatter_prefill_caches(model_mod.init_decode_caches(cfg, B, CL), one, 1)
+    for k in want:
+        np.testing.assert_array_equal(
+            np.asarray(state["caches"][k]), np.asarray(want[k]), err_msg=k
+        )
+
+
+def test_worker_pool_timeline_serialises_per_device(dsv2):
+    """One device: queued requests serialise on the pool timeline (FIFO);
+    two devices: they overlap.  The decode clock is never involved."""
+    cfg, params = dsv2
+    CL = 32
+    dev = jax.devices()[0]
+    mk = lambda rid: _mk_req(rid, np.arange(8) % cfg.vocab_size)
+    sink = lambda *a: None
+
+    def drain(w):
+        evs = []
+        for _ in range(50):
+            evs += w.poll(sink)
+            if len(evs) == 2:
+                return evs
+        raise AssertionError("did not drain")
+
+    w1 = PrefillWorker(cfg, params, [dev], cache_len=CL, chunk=4,
+                       prefill_time_fn=lambda n: 0.01 * n)
+    w1.submit(mk(0), slot=0, now=0.0)
+    w1.submit(mk(1), slot=1, now=0.0)
+    e1 = drain(w1)
+    assert e1[0].finish_t == pytest.approx(0.08)
+    assert e1[1].finish_t == pytest.approx(0.16)  # waited for the device
+
+    w2 = PrefillWorker(cfg, params, [dev, dev], cache_len=CL, chunk=4,
+                       prefill_time_fn=lambda n: 0.01 * n)
+    w2.submit(mk(0), slot=0, now=0.0)
+    w2.submit(mk(1), slot=1, now=0.0)
+    e2 = drain(w2)
+    assert all(ev.finish_t == pytest.approx(0.08) for ev in e2)  # parallel pools
+
+
+def test_worker_whole_prompt_fallback():
+    """Recurrent stacks can't chunk: the worker falls back to one
+    whole-prompt prefill on the pool device, handed off with length=-1."""
+    cfg = get_config("falcon-mamba-7b-reduced")
+    params = model_mod.init_params(cfg, 0)
+    w = PrefillWorker(cfg, params, [], cache_len=32, chunk=4,
+                      prefill_time_fn=lambda n: 0.001 * n)
+    assert not w.chunked
+    calls = []
+    w.submit(_mk_req(0, np.arange(6) % cfg.vocab_size), slot=0, now=0.0)
+    evs = w.poll(lambda slot, start, length, caches: calls.append((slot, start, length)))
+    assert len(evs) == 1 and calls == [(0, 0, -1)]
