@@ -1,0 +1,186 @@
+"""Fault-injection recovery shootout: what does surviving a failure cost?
+
+Drives the three-pool engine (dsv2-lite-reduced, degenerate in-process
+pools, modeled clock) through one fault-free baseline and four seeded fault
+scenarios, and writes ``BENCH_fault_recovery.json`` at the repo root:
+
+* ``baseline``       — no plan armed (the fault-free hot path);
+* ``attn_loss``      — one attention device killed mid-decode: the lost KV
+  shard is rebuilt by deterministic re-prefill + re-decode replay;
+* ``moe_loss``       — one MoE device killed: expert placement re-planned
+  onto the survivors, only that pool re-lowered;
+* ``prefill_loss``   — the prefill device killed mid-chunk: the displaced
+  request requeues from chunk 0;
+* ``transient_xchg`` — a healing exchange timeout: the idempotent decode
+  step retries under exponential backoff.
+
+The modeled clock makes the timing deterministic, so the report isolates
+what each recovery path charges: recovery latency (wall), fault stall
+(modeled backoff + recovery charge), throughput vs baseline — and the gate
+the tentpole must pass:
+
+    every scenario's final token streams are bit-identical to baseline.
+
+Run:  PYTHONPATH=src python -m benchmarks.fault_recovery_bench
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import Row
+from repro.configs import get_config
+from repro.core.aebs import ReplicaLayout
+from repro.models import model as model_mod
+from repro.serving.engine import ServingEngine
+from repro.serving.faults import (
+    DEVICE_LOSS,
+    EXCHANGE_TIMEOUT,
+    FaultPlan,
+    FaultSpec,
+    RetryPolicy,
+)
+from repro.serving.request import WorkloadSpec, sample_requests
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_PATH = os.path.join(REPO_ROOT, "BENCH_fault_recovery.json")
+
+ARCH = "dsv2-lite-reduced"
+N_REQUESTS = 6
+T_DECODE = 2e-3
+RECOVERY_CHARGE = 0.05  # modeled wall cost of one permanent-fault recovery
+
+SCENARIOS = [
+    ("attn_loss", FaultSpec(DEVICE_LOSS, pool="attn", index=1, at_step=8)),
+    ("moe_loss", FaultSpec(DEVICE_LOSS, pool="moe", index=0, at_step=8)),
+    ("prefill_loss", FaultSpec(DEVICE_LOSS, pool="prefill", index=0, at_step=2)),
+    ("transient_xchg", FaultSpec(EXCHANGE_TIMEOUT, at_step=6, transient=True,
+                                 fail_count=2)),
+]
+
+
+def _requests(cfg):
+    spec = WorkloadSpec(mean_input=8, mean_output=24, vocab_size=cfg.vocab_size,
+                        max_input=24, max_output=32, seed=5)
+    # packed arrivals: the batch is full when the fault lands, so recovery
+    # carries live KV state instead of recovering empty slots
+    return sample_requests(spec, np.linspace(0, 0.01, N_REQUESTS), with_prompts=True)
+
+
+def _engine(cfg, params, layout, plan=None):
+    return ServingEngine(
+        cfg, params, max_batch=4, cache_len=96, layout=layout,
+        scheduler="aebs", capacity_tokens=64,
+        executor="disagg", n_attn=2, n_prefill=1, prefill_chunk=8,
+        step_time_fn=lambda n_active: T_DECODE,
+        fault_plan=plan,
+        retry_policy=RetryPolicy(recovery_charge_s=RECOVERY_CHARGE),
+    )
+
+
+def run_scenarios() -> Dict:
+    cfg = get_config(ARCH)
+    params = model_mod.init_params(cfg, 0)
+    layout = ReplicaLayout.round_robin(cfg.num_experts, 2, 3)
+
+    results = []
+    streams = {}
+    for name, spec in [("baseline", None)] + SCENARIOS:
+        plan = FaultPlan(faults=[spec], seed=0) if spec is not None else None
+        eng = _engine(cfg, params, layout, plan)
+        m = eng.run(_requests(cfg), max_steps=50_000)
+        assert m["completed"] == N_REQUESTS, (name, m)
+        streams[name] = {r.rid: tuple(r.tokens_out) for r in eng.completed}
+        row = {
+            "scenario": name,
+            "completed": m["completed"],
+            "tokens": m["tokens"],
+            "throughput_tok_s": round(m["throughput_tok_s"], 2),
+            "tpot_p99_ms": round(m["tpot_p99"] * 1e3, 3),
+            "clock_s": round(m["clock"], 4),
+        }
+        if plan is not None:
+            f = m["faults"]
+            row.update(
+                detected=f["detected"],
+                retries=f["retries"],
+                recoveries=f["recoveries"],
+                requeued=f["requeued"],
+                replayed_slots=f["replayed_slots"],
+                degraded=f["degraded"],
+                fault_stall_s=round(f["fault_stall_s"], 4),
+                recovery_latency_mean_s=round(f["recovery_latency_mean_s"], 4),
+                recovery_latency_max_s=round(f["recovery_latency_max_s"], 4),
+            )
+        results.append(row)
+
+    identical = all(streams[n] == streams["baseline"] for n in streams)
+    base = next(r for r in results if r["scenario"] == "baseline")
+    recovered = all(
+        r.get("degraded", 0) == 0 and (r.get("recoveries", 0) > 0 or r.get("retries", 0) > 0)
+        for r in results
+        if r["scenario"] != "baseline"
+    )
+    return {
+        "bench": "fault_recovery",
+        "arch": ARCH,
+        "modeled_clock": {"t_decode_s": T_DECODE,
+                          "recovery_charge_s": RECOVERY_CHARGE},
+        "streams_bit_identical": bool(identical),
+        "all_scenarios_recovered": bool(recovered),
+        "baseline_throughput_tok_s": base["throughput_tok_s"],
+        "scenarios": results,
+    }
+
+
+def run() -> List[Row]:
+    """Harness entry point (benchmarks.run)."""
+    report = run_scenarios()
+    with open(OUT_PATH, "w") as fh:
+        json.dump(report, fh, indent=2)
+    rows: List[Row] = []
+    for e in report["scenarios"]:
+        rows.append(
+            (
+                f"fault_recovery/{e['scenario']}",
+                e.get("recovery_latency_mean_s", 0.0) * 1e6,
+                f"thr={e['throughput_tok_s']}tok/s stall={e.get('fault_stall_s', 0.0)}s "
+                f"recoveries={e.get('recoveries', 0)} replayed={e.get('replayed_slots', 0)} "
+                f"requeued={e.get('requeued', 0)}",
+            )
+        )
+    rows.append(
+        (
+            "fault_recovery/gate",
+            0.0,
+            f"streams_bit_identical={report['streams_bit_identical']} "
+            f"all_recovered={report['all_scenarios_recovered']}",
+        )
+    )
+    return rows
+
+
+def main() -> None:
+    report = run_scenarios()
+    with open(OUT_PATH, "w") as fh:
+        json.dump(report, fh, indent=2)
+    print(f"wrote {OUT_PATH}")
+    for e in report["scenarios"]:
+        print(
+            f"{e['scenario']:15s} thr={e['throughput_tok_s']:8.2f}tok/s "
+            f"tpot_p99={e['tpot_p99_ms']:.2f}ms "
+            f"stall={e.get('fault_stall_s', 0.0):.3f}s "
+            f"recovery={e.get('recovery_latency_mean_s', 0.0):.3f}s"
+        )
+    print(
+        f"streams bit-identical: {report['streams_bit_identical']}; "
+        f"all scenarios recovered: {report['all_scenarios_recovered']}"
+    )
+
+
+if __name__ == "__main__":
+    main()

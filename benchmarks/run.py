@@ -31,6 +31,7 @@ MODULES = [
     "moe_dispatch_bench",
     "disagg_pipeline_bench",
     "prefill_disagg_bench",
+    "fault_recovery_bench",
     "roofline_report",
 ]
 

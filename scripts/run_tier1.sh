@@ -8,4 +8,12 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-exec python -m pytest -x -q "$@"
+# Per-test deadline (pytest-timeout): a hung multi-device exchange or
+# subprocess must fail its own test with a traceback, not stall the suite.
+# Gated on the plugin being importable — environments without it (the
+# pinned container) run identically, just without the deadline.
+TIMEOUT_ARGS=()
+if python -c "import pytest_timeout" >/dev/null 2>&1; then
+  TIMEOUT_ARGS=(--timeout=600 --timeout-method=thread)
+fi
+exec python -m pytest -x -q ${TIMEOUT_ARGS[@]+"${TIMEOUT_ARGS[@]}"} "$@"

@@ -141,6 +141,32 @@ def build_layout(
     return place_replicas(R, A, num_instances, capacity, loads=counts)
 
 
+def layout_for_survivors(
+    num_experts: int,
+    n_surviving: int,
+    capacity: Optional[int] = None,
+    trace: Optional[np.ndarray] = None,
+) -> ReplicaLayout:
+    """Re-plan expert placement after a permanent MoE-device loss (§3.5
+    applied to failure instead of scaling): seat every expert on the
+    ``n_surviving`` instances, growing per-instance capacity as needed so no
+    expert is orphaned.  With a routing ``trace`` the activation-aware
+    allocate/place pipeline runs (same as a scaling reconfiguration); without
+    one a round-robin layout keeps recovery O(1) — either way the layout
+    seats all experts, so expert *semantics* (hence token streams) are
+    unchanged and only load balance degrades."""
+    if n_surviving < 1:
+        raise ValueError("MoE pool lost its last device — degrade to mono instead")
+    C = -(-num_experts // n_surviving)  # ceil: every expert gets a seat
+    if capacity is not None:
+        C = max(C, capacity)
+    if n_surviving * C == num_experts:
+        C += 1  # replication headroom, matching the serving default
+    if trace is not None:
+        return build_layout(trace, num_experts, n_surviving, C)
+    return ReplicaLayout.round_robin(num_experts, n_surviving, C)
+
+
 def instance_coactivation_load(layout: ReplicaLayout, coactivation: np.ndarray) -> np.ndarray:
     """I(g) of Eq. 6, for evaluation/benchmarks."""
     out = np.zeros(layout.num_instances)

@@ -41,6 +41,17 @@ def main():
     )
     ap.add_argument("--prefill-chunk", type=int, default=64, help="prefill chunk size (tokens)")
     ap.add_argument("--ping-pong", action="store_true", help="m=2 micro-batch overlap (disagg)")
+    ap.add_argument(
+        "--fault-plan", default=None, metavar="PATH",
+        help="JSON fault-injection plan (see repro.serving.faults.FaultPlan) — "
+        "device losses / exchange timeouts / prefill-chunk failures are "
+        "injected at the scheduled decode steps and recovered live",
+    )
+    ap.add_argument(
+        "--request-deadline", type=float, default=None,
+        help="admission deadline in seconds after arrival; requests that wait "
+        "longer while the engine is saturated are rejected",
+    )
     args = ap.parse_args()
 
     from repro.configs import get_config
@@ -62,6 +73,15 @@ def main():
         mean_input=8, mean_output=24, vocab_size=cfg.vocab_size, max_input=48, max_output=64
     )
     reqs = sample_requests(spec, poisson_arrivals(args.rate, args.duration, args.seed), with_prompts=True)
+    if args.request_deadline is not None:
+        for r in reqs:
+            r.deadline = r.arrival + args.request_deadline
+    fault_plan = None
+    if args.fault_plan is not None:
+        from repro.serving.faults import FaultPlan
+
+        with open(args.fault_plan) as fh:
+            fault_plan = FaultPlan.from_json(fh.read())
     eng = ServingEngine(
         cfg,
         params,
@@ -75,15 +95,20 @@ def main():
         admission=args.admission,
         prefill_chunk=args.prefill_chunk,
         ping_pong=args.ping_pong,
+        fault_plan=fault_plan,
     )
     print(
         f"serving {len(reqs)} requests on {cfg.name} "
         f"(scheduler={args.scheduler}, executor={args.executor}, "
-        f"admission={eng.admission}, n_prefill={args.n_prefill})"
+        f"admission={eng.admission}, n_prefill={args.n_prefill}"
+        + (f", fault_plan={args.fault_plan}" if fault_plan else "")
+        + ")"
     )
     m = eng.run(reqs)
     for k, v in m.items():
         print(f"  {k:20s} {v:.4f}" if isinstance(v, float) else f"  {k:20s} {v}")
+    if fault_plan is not None and eng.degraded_reason:
+        print(f"  degraded to mono executor: {eng.degraded_reason}")
 
 
 if __name__ == "__main__":

@@ -149,6 +149,44 @@ def build_disagg_executor(
     )
 
 
+def build_serving_engine(
+    cfg: ModelConfig,
+    params,
+    n_attn: int,
+    n_moe: int,
+    *,
+    max_batch: int,
+    cache_len: int,
+    n_prefill: int = 0,
+    layout: Optional[ReplicaLayout] = None,
+    scheduler: str = "aebs",
+    capacity: Optional[int] = None,
+    prefill_chunk: int = 64,
+    fault_plan=None,
+    retry_policy=None,
+    watchdog=None,
+    **engine_kw,
+):
+    """Launch-layer entry for a full fault-tolerant pool deployment: the
+    three-pool :class:`repro.serving.engine.ServingEngine` with a default
+    replica layout derived from the MoE pool size and an optional armed
+    :class:`repro.serving.faults.FaultPlan` — the one-call path
+    ``launch/serve.py --fault-plan`` and the fault benchmark build on."""
+    from repro.serving.engine import ServingEngine
+
+    if layout is None and cfg.has_moe:
+        layout = serving_layout(cfg, n_moe)
+    return ServingEngine(
+        cfg, params,
+        max_batch=max_batch, cache_len=cache_len,
+        layout=layout, scheduler=scheduler, capacity_tokens=capacity,
+        executor="disagg", n_attn=n_attn, n_prefill=n_prefill,
+        prefill_chunk=prefill_chunk,
+        fault_plan=fault_plan, retry_policy=retry_policy, watchdog=watchdog,
+        **engine_kw,
+    )
+
+
 def build_prefill_worker(
     cfg: ModelConfig,
     params,

@@ -61,6 +61,25 @@ class AutoScaler:
         self._input_tokens: List[float] = []
         self.current: Optional[EvalResult] = None
         self.events: List[ScalingEvent] = []
+        self.device_losses: List[tuple] = []  # (t, pool) permanent losses seen
+
+    # -- fault feedback --------------------------------------------------------
+    def on_device_loss(self, pool: str, now: float) -> None:
+        """A permanent device loss shrinks capacity: the scaler must stop
+        proposing configurations the surviving hardware cannot host.  Decode
+        pools cap the (n_a, n_e) search bound; prefill caps its own bound."""
+        if pool == "prefill":
+            self.n_prefill_max = max(1, self.n_prefill_max - 1)
+        else:
+            self.scaler.n_max = max(1, self.scaler.n_max - 1)
+        self.device_losses.append((now, pool))
+
+    def attach(self, engine) -> None:
+        """Subscribe to the engine's fault events so lost capacity feeds the
+        next scaling decision automatically."""
+        engine.fault_listeners.append(
+            lambda fault, t: self.on_device_loss(fault.pool, t)
+        )
 
     # -- demand estimation ---------------------------------------------------
     def observe(self, t: float, tokens: float, input_tokens: float = 0.0) -> None:

@@ -111,6 +111,8 @@ class DisaggExecutor:
                 "disagg executor requires a single-active-replica scheduler "
                 "(AEBS/random) so replica slots carry exact expert semantics"
             )
+        if len(pools.attn_devices) < 1:
+            raise ValueError("attention pool must have ≥ 1 device")
         self.cfg = cfg
         self.params = params
         self.pools = pools
@@ -120,6 +122,18 @@ class DisaggExecutor:
         self.hw = hw
         self.max_batch = max_batch
         self.cache_len = cache_len
+        # fault-injection hook (repro.serving.faults): called before each
+        # cross-pool exchange with (site, layer, micro_batch); may raise
+        # PoolFault.  None (the default) keeps the fault-free path untouched.
+        self.fault_hook = None
+        combo_all = (
+            list(pools.attn_devices)
+            + list(pools.prefill_devices)
+            + list(pools.moe_devices)
+        )
+        # degenerate single-host test pools alias physical devices; device
+        # exclusion and exceeds-available validation are meaningless there
+        self._aliased = len({id(d) for d in combo_all}) < len(combo_all)
         if devices is not None:
             self._all_devices = list(devices)
         else:
@@ -410,9 +424,30 @@ class DisaggExecutor:
         cur_a = len(self.pools.attn_devices)
         cur_e = len(self.pools.moe_devices)
         cur_p = len(self.pools.prefill_devices)
-        n_attn = cur_a if n_attn is None else n_attn
-        n_moe = cur_e if n_moe is None else n_moe
-        n_prefill = cur_p if n_prefill is None else n_prefill
+        n_attn = cur_a if n_attn is None else int(n_attn)
+        n_moe = cur_e if n_moe is None else int(n_moe)
+        n_prefill = cur_p if n_prefill is None else int(n_prefill)
+        # validate before any state mutates: a bad size must surface as a
+        # clear ValueError naming the pool, not an opaque downstream JAX error
+        if n_attn < 1:
+            raise ValueError(
+                f"attention pool size must be ≥ 1, got n_attn={n_attn} "
+                "(the engine cannot decode without an attention pool)"
+            )
+        if n_moe < 1:
+            raise ValueError(
+                f"MoE pool size must be ≥ 1, got n_moe={n_moe} "
+                "(expert layers need at least one MoE device)"
+            )
+        if n_prefill < 0:
+            raise ValueError(f"prefill pool size must be ≥ 0, got n_prefill={n_prefill}")
+        avail = len(self._all_devices if self._all_devices is not None else jax.devices())
+        if not self._aliased and n_attn + n_moe + n_prefill > avail:
+            raise ValueError(
+                f"pool sizes {n_attn} (attn) + {n_moe} (moe) + {n_prefill} "
+                f"(prefill) = {n_attn + n_moe + n_prefill} exceed the {avail} "
+                "available devices"
+            )
         relower = {
             "attn": n_attn != cur_a,
             "moe": n_moe != cur_e or layout is not None,
@@ -450,6 +485,53 @@ class DisaggExecutor:
         )
         self.relower_log.append(relower)
         return relower
+
+    # ------------------------------------------------------------------
+    # fault recovery: device loss
+    # ------------------------------------------------------------------
+    def exclude_device(self, pool: str, index: int) -> None:
+        """Remove a dead device from the executor's universe so the next
+        ``reconfigure`` re-splits onto survivors only.  With aliased
+        (device-reusing) single-host test pools the exclusion is skipped —
+        the loss is logical and recovery proceeds on the shared device."""
+        devs = {
+            "attn": self.pools.attn_devices,
+            "moe": self.pools.moe_devices,
+            "prefill": self.pools.prefill_devices,
+        }[pool][index]
+        universe = list(
+            self._all_devices if self._all_devices is not None else jax.devices()
+        )
+        hits = [i for i, d in enumerate(universe) if d is devs]
+        if self._aliased or len(hits) != 1:
+            return
+        universe.pop(hits[0])
+        self._all_devices = universe
+
+    def drop_attn_device(self, dead: int) -> List[int]:
+        """Attention device ``dead`` died: destroy its batch-shard KV rows
+        (a real failure loses that memory — recovery must *rebuild*, not
+        read), shrink the pool to the survivors, and return the lost global
+        batch rows so the engine can re-prefill their requests.  Needs ≥ 2
+        attention devices — with one, there is nothing to shrink to and the
+        engine degrades to the mono path instead."""
+        n_attn = len(self.pools.attn_devices)
+        if not 0 <= dead < n_attn:
+            raise ValueError(f"no attention device {dead} (pool has {n_attn})")
+        if n_attn < 2:
+            raise ValueError("cannot drop the last attention device — degrade instead")
+        lost: List[int] = []
+        for si, s in enumerate(self.shards):
+            if s.dev_index != dead:
+                continue
+            lost.extend(range(s.lo, s.hi))
+            self._kv[si] = [
+                {k: jnp.zeros_like(v) for k, v in layer.items()}
+                for layer in self._kv[si]
+            ]
+        self.exclude_device("attn", dead)
+        self.reconfigure(n_attn=n_attn - 1)
+        return sorted(lost)
 
     # ------------------------------------------------------------------
     # the exchange: realised two-phase transfer
@@ -580,6 +662,8 @@ class DisaggExecutor:
                 attn_mb(group)
                 t0 = time.perf_counter()
                 h2s = {self.shards[si].dev_index: h2s_all[si] for si in group}
+                if self.fault_hook is not None:
+                    self.fault_hook("exchange", li, m)
                 h_on_moe = self._run_exchange(h2s, regime, tel)
                 t0 = _tick("exchange", h_on_moe, t0)
                 res = [

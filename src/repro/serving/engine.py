@@ -58,12 +58,24 @@ import numpy as np
 from repro.core.aebs import ReplicaLayout, aebs_assign
 from repro.core import baselines
 from repro.core.disagg import DevicePools
+from repro.core.placement import layout_for_survivors
 from repro.kernels.aebs.ops import aebs_schedule
 from repro.models import model as model_mod
+from repro.serving.faults import (
+    DEVICE_LOSS,
+    FaultPlan,
+    FaultRuntime,
+    PoolFault,
+    RetryPolicy,
+    Watchdog,
+)
 from repro.serving.kv_cache import (
+    ACTIVE,
+    PREFILLING,
     SlotManager,
     scatter_prefill_caches,
     scatter_prefill_chunk_caches,
+    zero_slots,
 )
 from repro.serving.prefill import PrefillEvent, PrefillWorker
 from repro.serving.request import Request
@@ -101,6 +113,10 @@ class ServingEngine:
         pools: Optional[DevicePools] = None,
         node_size: int = 1,
         ping_pong: bool = False,
+        fault_plan: Optional[FaultPlan] = None,
+        retry_policy: Optional[RetryPolicy] = None,
+        watchdog: Optional[Watchdog] = None,
+        max_prefill_queue: Optional[int] = None,  # admission backpressure bound
     ):
         self.cfg = cfg
         self.params = params
@@ -119,7 +135,20 @@ class ServingEngine:
         self.regime_log: List[str] = []
         self.transfer_bytes_log: List[int] = []
         self.completed: List[Request] = []
+        self.rejected: List[Request] = []
         self.decode_stall_time = 0.0  # prefill time charged while decodes were in flight
+        self.steps_done = 0  # global decode-step ordinal (fault schedules key off it)
+        if max_prefill_queue is not None and max_prefill_queue < 1:
+            raise ValueError(
+                f"max_prefill_queue must be ≥ 1, got {max_prefill_queue} "
+                "(a zero bound would close admission permanently)"
+            )
+        self.max_prefill_queue = max_prefill_queue
+        self.faults: Optional[FaultRuntime] = None
+        self.degraded_reason: Optional[str] = None
+        # subscribers notified on permanent device loss: fn(fault, clock).
+        # The AutoScaler attaches here so lost capacity feeds its next decision.
+        self.fault_listeners: List[Callable[[PoolFault, float], None]] = []
 
         moe_ctx = None
         if cfg.has_moe and layout is not None and scheduler != "none":
@@ -212,6 +241,305 @@ class ServingEngine:
             extra=worker_extra, prefill_time_fn=worker_time_fn,
         )
 
+        if fault_plan is not None:
+            self.arm_faults(fault_plan, policy=retry_policy, watchdog=watchdog)
+
+    # ------------------------------------------------------------------
+    # fault injection / health monitoring
+    # ------------------------------------------------------------------
+    def arm_faults(
+        self,
+        plan: FaultPlan,
+        policy: Optional[RetryPolicy] = None,
+        watchdog: Optional[Watchdog] = None,
+    ) -> FaultRuntime:
+        """Arm a fault plan: build the runtime and install its hooks on the
+        executor exchange path and the prefill worker's chunk loop.  With no
+        plan armed neither hook exists and the hot path is untouched."""
+        self.faults = FaultRuntime(plan, policy=policy, watchdog=watchdog)
+        if self.disagg is not None:
+            self.disagg.fault_hook = self.faults.exchange_hook
+        self.prefill_worker.fault_hook = self.faults.prefill_hook
+        return self.faults
+
+    def _pool_sizes(self) -> Dict[str, int]:
+        sizes = {"attn": 0, "moe": 0}
+        if self.disagg is not None:
+            sizes["attn"] = len(self.disagg.pools.attn_devices)
+            sizes["moe"] = len(self.disagg.pools.moe_devices)
+        sizes["prefill"] = len(self.prefill_worker.devices)
+        return sizes
+
+    def _charge(self, dt: float) -> None:
+        """Advance the clock for fault handling (backoff, recovery) and book
+        the stall so operators can see what faults cost."""
+        if dt <= 0:
+            return
+        self.clock += dt
+        if self.faults is not None:
+            self.faults.stats.fault_stall_s += dt
+
+    def _fault_preflight(self) -> None:
+        """Heartbeat: fire any step-scheduled faults, then poll pool health
+        and recover from every detected device loss before decoding."""
+        self.faults.advance_to_step(self.steps_done)
+        while True:
+            fault = self.faults.poll_health(self._pool_sizes())
+            if fault is None:
+                return
+            self._recover(fault)
+
+    def _recover(self, fault: PoolFault) -> None:
+        """Dispatch recovery for a permanent fault and book its latency."""
+        t0 = time.perf_counter()
+        if fault.pool == "moe":
+            self._recover_moe_loss(fault)
+        elif fault.pool == "attn":
+            self._recover_attn_loss(fault)
+        elif fault.pool == "prefill":
+            self._recover_prefill_loss(fault)
+        else:  # unknown pool: last resort
+            self._degrade_to_mono(f"unrecoverable fault: {fault}")
+        self.faults.mark_handled(fault)
+        wall = time.perf_counter() - t0
+        stats = self.faults.stats
+        stats.recoveries += 1
+        stats.recovery_latency_s.append(wall)
+        # modeled clocks charge the policy constant (deterministic tests);
+        # wall clocks charge what recovery actually took
+        self._charge(
+            self.faults.policy.recovery_charge_s if self.step_time_fn else wall
+        )
+        if fault.kind == DEVICE_LOSS:
+            for listener in self.fault_listeners:
+                listener(fault, self.clock)
+
+    def _recover_moe_loss(self, fault: PoolFault) -> None:
+        """Permanent MoE-device loss: re-plan expert placement onto the
+        survivors and re-lower only the MoE pool.  Every expert keeps a seat,
+        so expert semantics — hence token streams — are unchanged."""
+        ex = self.disagg
+        if ex is None:
+            return  # already degraded to mono: there is no MoE pool to lose
+        n_moe = len(ex.pools.moe_devices)
+        if n_moe <= 1:
+            self._degrade_to_mono("lost the last MoE device")
+            return
+        ex.exclude_device("moe", fault.index)
+        new_layout = layout_for_survivors(self.cfg.num_experts, n_moe - 1)
+        self.reconfigure(n_moe=n_moe - 1, layout=new_layout)
+
+    def _recover_attn_loss(self, fault: PoolFault) -> None:
+        """Permanent attention-device loss: the dead shard's KV rows are
+        gone.  Re-shard the batch over the survivors, then rebuild each lost
+        slot by deterministic replay (re-prefill + re-decode of its own
+        history) — bit-exact because every row is rewritten by the same
+        jitted program that originally produced it."""
+        ex = self.disagg
+        if ex is None:
+            return
+        if len(ex.pools.attn_devices) <= 1:
+            # no surviving shard to host the batch: degrade, then rebuild
+            # everything (the whole batch lived on the dead device)
+            self._degrade_to_mono(
+                "lost the last attention device",
+                lost_rows=list(range(self.max_batch)),
+            )
+            return
+        lost_rows = ex.drop_attn_device(fault.index)
+        self._rebuild_lost_slots(lost_rows)
+
+    def _recover_prefill_loss(self, fault: PoolFault) -> None:
+        """Prefill-worker/device failure: drop its in-flight prefill, shrink
+        the pool, and requeue the displaced request from chunk 0 — chunked
+        prefill is deterministic, so the restart serves identical tokens."""
+        worker = self.prefill_worker
+        displaced = worker.fail_device(fault.index)
+        if self.disagg is not None and len(self.disagg.pools.prefill_devices) > 0:
+            self.disagg.exclude_device("prefill", fault.index)
+            self.reconfigure(
+                n_prefill=len(self.disagg.pools.prefill_devices) - 1
+            )  # syncs worker.set_devices (falls back to the default device at 0)
+        else:
+            survivors = [d for i, d in enumerate(worker.devices) if i != fault.index]
+            worker.set_devices(survivors, self.params)
+        for req in displaced:
+            slot = req.slot
+            self.slots.fail(slot)
+            self.slots.requeue(slot)
+            self.slots.start_prefill(slot)
+            worker.submit(req, slot, now=max(self.clock, req.arrival))
+            self.faults.stats.requeued += 1
+
+    def _rebuild_lost_slots(self, lost_rows: List[int]) -> None:
+        """Restore every occupied slot whose KV rows a dead attention shard
+        took with it: ACTIVE slots replay their full history; PREFILLING
+        slots requeue (their already-streamed chunks landed on the dead
+        shard); RESERVED/FREE slots had nothing to lose."""
+        stats = self.faults.stats
+        for slot in lost_rows:
+            state = self.slots.state[slot]
+            if state == ACTIVE:
+                self._replay_slot(slot)
+                stats.replayed_slots += 1
+            elif state == PREFILLING:
+                req = self.prefill_worker.cancel_slot(slot)
+                if req is None:
+                    # prefill already finished; its event is waiting for
+                    # activation but every streamed chunk is lost — drop the
+                    # event and restart the prompt
+                    for ev in self._ready:
+                        if ev.slot == slot:
+                            req = ev.req
+                    self._ready = [ev for ev in self._ready if ev.slot != slot]
+                if req is None:
+                    continue
+                self.slots.fail(slot)
+                self.slots.requeue(slot)
+                self.slots.start_prefill(slot)
+                self.prefill_worker.submit(req, slot, now=max(self.clock, req.arrival))
+                stats.requeued += 1
+
+    def _replay_slot(self, slot: int) -> None:
+        """Deterministically rebuild one slot's KV: re-prefill the prompt
+        through the worker (same chunk boundaries, same jitted program →
+        bit-exact), then re-decode the generated tokens one at a time with
+        every other slot parked at the scratch row — each row is rebuilt by
+        the machinery that originally wrote it, and every replayed token is
+        checked against the recorded stream."""
+        req = self.slots.slot_req[slot]
+        prompt = req.prompt
+        if prompt is None:
+            rng = np.random.default_rng(req.rid)
+            prompt = rng.integers(0, self.cfg.vocab_size, size=req.input_len, dtype=np.int32)
+        first = self.prefill_worker.run_sync(
+            np.asarray(prompt, np.int32), slot, self._chunk_sink
+        )
+        if req.tokens_out and first != req.tokens_out[0]:
+            raise RuntimeError(
+                f"recovery replay diverged at the first token of slot {slot}: "
+                f"{first} != {req.tokens_out[0]}"
+            )
+        for t in range(req.generated):
+            toks = np.zeros((self.max_batch, 1), np.int32)
+            toks[slot, 0] = req.tokens_out[t]
+            pos = np.full((self.max_batch,), self.cache_len - 1, np.int32)
+            pos[slot] = req.input_len + t
+            if self.disagg is not None:
+                logits, _ = self.disagg.decode_step(
+                    jnp.asarray(toks), jnp.asarray(pos)
+                )
+            else:
+                logits, self.caches = self._decode_jit(
+                    self.params, jnp.asarray(toks), self.caches, jnp.asarray(pos)
+                )
+            nxt = int(np.argmax(np.asarray(logits[slot])))
+            if nxt != req.tokens_out[t + 1]:
+                raise RuntimeError(
+                    f"recovery replay diverged at generated token {t} of slot "
+                    f"{slot}: {nxt} != {req.tokens_out[t + 1]}"
+                )
+
+    def _degrade_to_mono(
+        self, reason: str, lost_rows: Optional[List[int]] = None
+    ) -> None:
+        """Last resort: collapse the disaggregated executor onto the default
+        device.  Surviving KV is exported; ``lost_rows`` (rows a dead shard
+        destroyed) are zeroed and rebuilt by replay after the switch."""
+        ex = self.disagg
+        if self.faults is not None:
+            self.faults.stats.degraded += 1
+        if ex is None:
+            return
+        caches = ex.export_caches()
+        if lost_rows:
+            caches = zero_slots(caches, lost_rows)
+        self.caches = jax.device_put(caches, jax.devices()[0])
+        self.disagg = None
+        self.executor_name = "mono"
+        self.degraded_reason = reason
+        if lost_rows:
+            self._rebuild_lost_slots(lost_rows)
+
+    def _guarded_decode(self, positions) -> tuple:
+        """One decode step with the fault envelope: transient exchange faults
+        retry the (idempotent) step under exponential backoff; a spent retry
+        budget or an unrecoverable fault degrades to mono; injected
+        sub-deadline delays are charged to the clock."""
+        if self.faults is None:
+            return self._decode_once(positions)
+        attempt = 0
+        while True:
+            try:
+                logits, tel = self._decode_once(positions)
+            except PoolFault as fault:
+                if not fault.transient:
+                    self._recover(fault)
+                    continue
+                attempt += 1
+                self.faults.stats.retries += 1
+                if attempt > self.faults.policy.max_retries:
+                    self.faults.mark_handled(fault)
+                    self._degrade_to_mono(f"retry budget exhausted: {fault}")
+                    continue
+                self._charge(self.faults.policy.delay(attempt))
+                continue
+            self._charge(self.faults.consume_delay())
+            return logits, tel
+
+    def _decode_once(self, positions) -> tuple:
+        if self.disagg is not None:
+            logits, tel = self.disagg.decode_step(self.tokens, positions)
+            logits.block_until_ready()
+            return logits, tel
+        logits, self.caches = self._decode_jit(
+            self.params, self.tokens, self.caches, positions
+        )
+        logits.block_until_ready()
+        return logits, None
+
+    def _worker_poll(self) -> List[PrefillEvent]:
+        """Poll the prefill worker under the fault envelope: transient chunk
+        faults retry (the hook fires before any compute, so the chunk is
+        untouched); a spent budget escalates to device loss on that device."""
+        if self.faults is None:
+            return self.prefill_worker.poll(self._chunk_sink)
+        attempt = 0
+        while True:
+            try:
+                return self.prefill_worker.poll(self._chunk_sink)
+            except PoolFault as fault:
+                if not fault.transient:
+                    self._recover(fault)
+                    continue
+                attempt += 1
+                self.faults.stats.retries += 1
+                if attempt > self.faults.policy.max_retries:
+                    self.faults.mark_handled(fault)
+                    self._recover(
+                        PoolFault(
+                            "prefill", fault.index, DEVICE_LOSS,
+                            transient=False,
+                            detail="chunk retry budget exhausted",
+                        )
+                    )
+                    attempt = 0
+                    continue
+                self._charge(self.faults.policy.delay(attempt))
+
+    def _reject(self, req: Request) -> None:
+        """Admission control: the request waited past its deadline while the
+        engine was saturated — reject it without ever holding a slot."""
+        req.rejected = True
+        req.finished = self.clock
+        self.rejected.append(req)
+
+    def _admission_open(self) -> bool:
+        """Backpressure: stop admitting when the prefill queue is saturated."""
+        if self.max_prefill_queue is None:
+            return True
+        return self.prefill_worker.num_pending < self.max_prefill_queue
+
     # ------------------------------------------------------------------
     # admission
     # ------------------------------------------------------------------
@@ -226,7 +554,7 @@ class ServingEngine:
         self.prefill_worker.submit(req, slot, now=now)
         events: List[PrefillEvent] = []
         while not events:
-            events = self.prefill_worker.poll(self._chunk_sink)
+            events = self._worker_poll()
         ev = events[0]
         # legacy clock semantics: modeled prefill time when calibrated, wall
         # otherwise (zero under a modeled decode clock with no prefill model —
@@ -266,7 +594,7 @@ class ServingEngine:
     def _poll_prefill(self) -> None:
         """Advance the prefill pipeline and activate any finished requests
         whose completion stamp the decode clock has passed."""
-        self._ready.extend(self.prefill_worker.poll(self._chunk_sink))
+        self._ready.extend(self._worker_poll())
         still: List[PrefillEvent] = []
         for ev in self._ready:
             if ev.finish_t <= self.clock:
@@ -284,19 +612,18 @@ class ServingEngine:
 
     # ------------------------------------------------------------------
     def _decode_iteration(self) -> None:
+        if self.faults is not None:
+            self._fault_preflight()
         positions = self.slots.positions_device()
         t0 = time.perf_counter()
-        if self.disagg is not None:
-            logits, tel = self.disagg.decode_step(self.tokens, positions)
-            logits.block_until_ready()
+        logits, tel = self._guarded_decode(positions)
+        if tel is not None:
             self.regime_log.append(tel["regime"])
             self.transfer_bytes_log.append(tel["bytes_total"])
             self.amax_log.append(tel["a_max"])
-        else:
-            logits, self.caches = self._decode_jit(self.params, self.tokens, self.caches, positions)
-            logits.block_until_ready()
         wall = time.perf_counter() - t0
         self.clock += self.step_time_fn(self.slots.num_active) if self.step_time_fn else wall
+        self.steps_done += 1
 
         next_tokens = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
         new = self.tokens
@@ -321,8 +648,27 @@ class ServingEngine:
         waiting = sorted(requests, key=lambda r: r.arrival)
         steps = 0
         while (waiting or self.slots.num_active or self._prefill_pending()) and steps < max_steps:
+            # admission control: reject arrived requests whose deadline lapsed
+            # while the engine was saturated (they never held a slot)
+            if any(r.deadline is not None for r in waiting):
+                still_waiting: List[Request] = []
+                for r in waiting:
+                    if (
+                        r.deadline is not None
+                        and r.arrival <= self.clock
+                        and self.clock > r.deadline
+                    ):
+                        self._reject(r)
+                    else:
+                        still_waiting.append(r)
+                waiting = still_waiting
             # admit arrived requests into free slots
-            while waiting and waiting[0].arrival <= self.clock and self.slots.free_slots:
+            while (
+                waiting
+                and waiting[0].arrival <= self.clock
+                and self.slots.free_slots
+                and self._admission_open()
+            ):
                 req = waiting.pop(0)
                 if self.admission == "pipelined":
                     self._submit_request(req)
@@ -375,8 +721,13 @@ class ServingEngine:
         done = self.completed
         out: Dict = {"completed": len(done), "tokens": sum(r.generated for r in done)}
         out["truncated"] = sum(1 for r in done if r.truncated)
+        out["rejected"] = len(self.rejected)
         out["decode_stall_time"] = self.decode_stall_time
         out["prefill_chunks"] = self.prefill_worker.chunks_done
+        if self.faults is not None:
+            out["faults"] = self.faults.stats.as_dict()
+            if self.degraded_reason is not None:
+                out["degraded_reason"] = self.degraded_reason
         # disaggregated-exchange telemetry (satellite of amax_log): which
         # two-phase regime served each step, and the bytes it moved
         if self.regime_log:

@@ -8,13 +8,21 @@ masks are position-bounded per request.
 Slot lifecycle (pipelined admission, prefill-pool disaggregation)::
 
     FREE ──reserve──▶ RESERVED ──start_prefill──▶ PREFILLING ──activate──▶ ACTIVE
-      ▲                                                                      │
+      ▲                              ▲                 │                     │
+      │                              │fail + requeue   │fail                 │
+      │                         REQUEUED ◀──requeue── FAILED                 │
       └────────────────────────────── release ◀──────────────────────────────┘
 
 ``admit`` is the legacy blocking path: FREE → ACTIVE in one call.  Reserved
 and prefilling slots are *owned* (not free) but not decoded: the decode loop
 only batches ACTIVE slots, so a request whose prompt is still streaming in
 chunk-by-chunk never corrupts (or stalls) the in-flight batch.
+
+``FAILED``/``REQUEUED`` are the fault-recovery detour: a prefill-worker
+failure (or a lost attention shard mid-prefill) marks the slot FAILED, the
+engine requeues the request, and prefill restarts from chunk 0 — chunked
+prefill is deterministic, so the restarted request emits the same tokens it
+would have without the fault.
 
 Inactive slots park their write position at ``cache_len - 1`` (a reserved
 scratch entry no live context may reach), so the batched decode step can run
@@ -36,6 +44,8 @@ FREE = "free"
 RESERVED = "reserved"
 PREFILLING = "prefilling"
 ACTIVE = "active"
+FAILED = "failed"  # prefill lost to a fault; awaiting requeue
+REQUEUED = "requeued"  # re-admitted to the prefill queue after a fault
 
 
 @dataclasses.dataclass
@@ -59,7 +69,11 @@ class SlotManager:
     @property
     def pending_slots(self) -> List[int]:
         """Slots owned by a request whose prefill has not finished."""
-        return [i for i, s in enumerate(self.state) if s in (RESERVED, PREFILLING)]
+        return [
+            i
+            for i, s in enumerate(self.state)
+            if s in (RESERVED, PREFILLING, FAILED, REQUEUED)
+        ]
 
     @property
     def num_active(self) -> int:
@@ -83,9 +97,24 @@ class SlotManager:
         return s
 
     def start_prefill(self, slot: int) -> None:
-        if self.state[slot] != RESERVED:
-            raise RuntimeError(f"slot {slot} is {self.state[slot]}, expected {RESERVED}")
+        if self.state[slot] not in (RESERVED, REQUEUED):
+            raise RuntimeError(
+                f"slot {slot} is {self.state[slot]}, expected {RESERVED} or {REQUEUED}"
+            )
         self.state[slot] = PREFILLING
+
+    # -- fault-recovery detour: prefilling → failed → requeued → prefilling --
+    def fail(self, slot: int) -> None:
+        """Mark a slot whose in-flight prefill was lost to a fault."""
+        if self.state[slot] not in (RESERVED, PREFILLING):
+            raise RuntimeError(f"slot {slot} is {self.state[slot]}, cannot fail")
+        self.state[slot] = FAILED
+
+    def requeue(self, slot: int) -> None:
+        """Hand a failed slot back to the prefill queue (restart at chunk 0)."""
+        if self.state[slot] != FAILED:
+            raise RuntimeError(f"slot {slot} is {self.state[slot]}, expected {FAILED}")
+        self.state[slot] = REQUEUED
 
     def activate(self, slot: int) -> None:
         if self.state[slot] not in (RESERVED, PREFILLING):
@@ -124,6 +153,27 @@ def scatter_prefill_caches(
             out[k] = batch_caches[k].at[slot].set(v[0])
         else:
             out[k] = batch_caches[k].at[:, slot].set(v[:, 0])
+    return out
+
+
+def zero_slots(
+    batch_caches: Dict[str, jax.Array], slots: List[int]
+) -> Dict[str, jax.Array]:
+    """Destroy the KV rows of ``slots`` (batch axis 1; ``enc_out`` axis 0).
+
+    Fault-recovery helper: when an attention shard dies, the slots it hosted
+    are *actually* zeroed before re-sharding, so recovery tests prove the
+    deterministic re-prefill replay rebuilt the state rather than silently
+    reading rows a real failure would have destroyed."""
+    if not slots:
+        return batch_caches
+    idx = np.asarray(slots)
+    out = dict(batch_caches)
+    for k, v in batch_caches.items():
+        if k == "enc_out":
+            out[k] = v.at[idx].set(0)
+        else:
+            out[k] = v.at[:, idx].set(0)
     return out
 
 

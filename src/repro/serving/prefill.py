@@ -93,6 +93,10 @@ class PrefillWorker:
         self.max_chunks_per_poll = max(1, int(max_chunks_per_poll))
         self.chunked = model_mod.supports_chunked_prefill(cfg)
         self.chunks_done = 0
+        # fault-injection hook (repro.serving.faults): called before each
+        # chunk's compute with (slot, dev_index, chunk_ordinal); may raise
+        # PoolFault.  None (the default) keeps the fault-free path untouched.
+        self.fault_hook = None
         self.set_devices(devices, params)
 
         def _call_extra(n_tokens: int):
@@ -173,6 +177,66 @@ class PrefillWorker:
         return len(self._queue) + sum(e is not None for e in self._current)
 
     # ------------------------------------------------------------------
+    # fault recovery
+    # ------------------------------------------------------------------
+    def fail_device(self, dev_index: int) -> List[Request]:
+        """A prefill device died: drop its in-flight entry's partial caches
+        (they lived on the dead device — a real failure destroys them) and
+        return the displaced requests for the engine to requeue from chunk 0.
+        The device itself stays in ``self.devices`` until the engine resizes
+        the pool (``set_devices`` / ``engine.reconfigure``)."""
+        displaced: List[Request] = []
+        if 0 <= dev_index < len(self._current):
+            entry = self._current[dev_index]
+            if entry is not None:
+                self._current[dev_index] = None
+                entry.caches = None
+                entry.done = 0
+                displaced.append(entry.req)
+        return displaced
+
+    def cancel_slot(self, slot: int) -> Optional[Request]:
+        """Withdraw a queued or in-flight request by slot (its streamed-out
+        chunks were lost downstream); returns the request, or None if the
+        worker no longer holds it."""
+        for i, entry in enumerate(self._queue):
+            if entry.slot == slot:
+                self._queue.pop(i)
+                return entry.req
+        for di, entry in enumerate(self._current):
+            if entry is not None and entry.slot == slot:
+                self._current[di] = None
+                return entry.req
+        return None
+
+    def run_sync(self, prompt: np.ndarray, slot: int, sink) -> int:
+        """Deterministic replay: prefill ``prompt`` synchronously on device 0
+        and stream every chunk through ``sink``, bypassing the queue, the
+        pool timeline *and* the fault hook (recovery work is not re-faulted).
+        Chunk boundaries match the queued path (fixed size from 0), so the
+        replayed KV slabs are bit-identical to what the original admission
+        streamed.  Returns the first generated token (greedy)."""
+        dev = self.devices[0]
+        params = self._params[0]
+        prompt = np.asarray(prompt, np.int32)
+        n = len(prompt)
+        if not self.chunked:
+            toks = jax.device_put(jnp.asarray(prompt)[None, :], dev)
+            logits, caches = self._full_jit(params, toks)
+            sink(slot, 0, -1, caches)
+            return int(np.argmax(np.asarray(logits[0])))
+        caches = jax.device_put(
+            model_mod.init_decode_caches(self.cfg, 1, self.cache_len), dev
+        )
+        logits = None
+        for lo in range(0, n, self.chunk):
+            hi = min(lo + self.chunk, n)
+            toks = jax.device_put(jnp.asarray(prompt[lo:hi])[None, :], dev)
+            logits, caches = self._chunk_jit(params, toks, caches, jnp.int32(lo))
+            sink(slot, lo, hi - lo, caches)
+        return int(np.argmax(np.asarray(logits[0])))
+
+    # ------------------------------------------------------------------
     # the pipeline: one poll = at most ``max_chunks_per_poll`` chunks/device
     # ------------------------------------------------------------------
     def poll(self, sink: Callable[[int, int, int, Dict], None]) -> List[PrefillEvent]:
@@ -206,6 +270,10 @@ class PrefillWorker:
         return events
 
     def _advance(self, entry: _InFlight, sink) -> Optional[PrefillEvent]:
+        if self.fault_hook is not None:
+            # before any compute or state mutation: a raise here leaves the
+            # entry untouched, so a retry of the same poll is trivially safe
+            self.fault_hook(entry.slot, entry.dev_index, self.chunks_done)
         dev = self.devices[entry.dev_index]
         params = self._params[entry.dev_index]
         n = len(entry.prompt)

@@ -15,12 +15,20 @@ class Request:
     input_len: int
     output_len: int  # target generation length
     prompt: Optional[np.ndarray] = None  # token ids (synthetic)
+    # admission deadline (absolute clock time): a request still waiting for a
+    # slot / prefill-queue room past this moment is *rejected* — a clean
+    # terminal state counted in metrics()["rejected"] — instead of queuing
+    # unboundedly.  None = wait forever (the pre-backpressure behaviour).
+    deadline: Optional[float] = None
     # runtime state
     slot: int = -1
     prefill_done: float = -1.0
     generated: int = 0
     token_times: Optional[List[float]] = None
     finished: float = -1.0
+    # terminal admission rejection (deadline passed while saturated) — the
+    # request never held a slot and emitted no tokens
+    rejected: bool = False
     # context window exhausted before output_len tokens were generated — the
     # request still completes, but the cut is no longer silent
     truncated: bool = False

@@ -464,14 +464,34 @@ print("DISAGG_OK", {k: len(v) for k, v in outs["disagg"].items()})
 """
 
 
-def test_disagg_multidevice_subprocess():
-    r = subprocess.run(
-        [sys.executable, "-c", SCRIPT],
-        capture_output=True,
-        text=True,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "JAX_PLATFORMS": "cpu",
-             "HOME": "/root"},
-        cwd="/root/repo",
-        timeout=600,
+def run_forced_device_subprocess(script, timeout=540, marker="OK"):
+    """Run a forced-host-device script in a child process with an explicit
+    deadline: on a hang the child is killed (``subprocess.run`` sends
+    SIGKILL on expiry) and whatever it printed before stalling is surfaced —
+    a hung multi-device exchange must fail loudly with its partial output,
+    not eat the suite's whole timeout budget silently."""
+    env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "JAX_PLATFORMS": "cpu",
+           "HOME": "/root"}
+    try:
+        r = subprocess.run(
+            [sys.executable, "-c", script],
+            capture_output=True, text=True, env=env, cwd="/root/repo",
+            timeout=timeout,
+        )
+    except subprocess.TimeoutExpired as e:
+        def _txt(b):
+            return b.decode(errors="replace") if isinstance(b, bytes) else (b or "")
+        pytest.fail(
+            f"multi-device subprocess hung past {timeout}s and was killed\n"
+            f"--- captured stdout ---\n{_txt(e.stdout)}\n"
+            f"--- captured stderr ---\n{_txt(e.stderr)}"
+        )
+    assert r.returncode == 0 and marker in r.stdout, (
+        f"subprocess exited rc={r.returncode}\n--- stdout ---\n{r.stdout}\n"
+        f"--- stderr ---\n{r.stderr}"
     )
-    assert "DISAGG_OK" in r.stdout, r.stdout + "\n" + r.stderr
+    return r
+
+
+def test_disagg_multidevice_subprocess():
+    run_forced_device_subprocess(SCRIPT, marker="DISAGG_OK")

@@ -9,12 +9,15 @@ import pytest
 
 from repro.serving.kv_cache import (
     ACTIVE,
+    FAILED,
     FREE,
     PREFILLING,
+    REQUEUED,
     RESERVED,
     SlotManager,
     scatter_prefill_caches,
     scatter_prefill_chunk_caches,
+    zero_slots,
 )
 from repro.serving.request import Request
 
@@ -77,6 +80,48 @@ def test_slot_invalid_transitions_raise():
     sm.activate(0)
     with pytest.raises(RuntimeError, match="cannot activate"):
         sm.activate(0)  # already active
+
+
+def test_slot_fault_detour_fail_requeue():
+    """Fault-recovery detour: a prefilling slot whose work is lost walks
+    failed → requeued → prefilling and eventually activates as normal."""
+    sm = SlotManager(max_batch=2, cache_len=32)
+    r = _req(3, input_len=6)
+    s = sm.reserve(r)
+    sm.start_prefill(s)
+    sm.fail(s)
+    assert sm.state[s] == FAILED
+    # failed slots are still owned (pending), never decoded
+    assert sm.pending_slots == [s] and s not in sm.free_slots
+    sm.requeue(s)
+    assert sm.state[s] == REQUEUED and sm.pending_slots == [s]
+    sm.start_prefill(s)  # restart at chunk 0
+    sm.activate(s)
+    assert sm.state[s] == ACTIVE and sm.positions[s] == 6
+    # invalid detour transitions raise with the offending state named
+    with pytest.raises(RuntimeError, match="cannot fail"):
+        sm.fail(s)  # active slots don't fail through the prefill detour
+    with pytest.raises(RuntimeError, match="expected failed"):
+        sm.requeue(s)
+    # a reserved slot may fail too (queue entry lost before any chunk ran)
+    r2 = _req(4)
+    s2 = sm.reserve(r2)
+    sm.fail(s2)
+    assert sm.state[s2] == FAILED
+
+
+def test_zero_slots_destroys_only_named_rows():
+    """zero_slots wipes the batch rows a dead shard hosted (enc_out on axis
+    0, stacked caches on axis 1) and leaves every other row untouched."""
+    caches = {k: v + 1.0 for k, v in _batch_caches().items()}
+    out = zero_slots(caches, [0, 2])
+    for k, v in out.items():
+        got = np.asarray(v)
+        if k == "enc_out":
+            assert (got[[0, 2]] == 0).all() and (got[1] == 1.0).all()
+        else:
+            assert (got[:, [0, 2]] == 0).all() and (got[:, 1] == 1.0).all()
+    assert zero_slots(caches, []) is caches  # no-op fast path
 
 
 # ---------------------------------------------------------------------------
