@@ -174,6 +174,111 @@ def decode_attention_int8_pallas(
     return out.reshape(B, nkv, G, hd).reshape(B, nh, hd)
 
 
+def _paged_decode_attn_kernel(
+    bt_ref,  # scalar-prefetch [B, nblk] int32 — per-slot block table
+    len_ref,  # scalar-prefetch [B] int32 — per-slot valid lengths
+    q_ref,  # [1, 1, 1, G, hd]
+    k_ref,  # [1, ps, 1, hd] — page bt[b, j] of the pool
+    v_ref,  # [1, ps, 1, hd]
+    o_ref,  # [1, 1, 1, G, hd]
+    m_scr,  # VMEM [G, 1] f32
+    l_scr,  # VMEM [G, 1] f32
+    acc_scr,  # VMEM [G, hd] f32
+    *,
+    num_kv_blocks: int,
+    page_size: int,
+    logit_cap: float,
+):
+    """Page-indirect flash decode: the grid walks each slot's *virtual* KV
+    blocks in order, and the scalar-prefetched block table redirects the K/V
+    BlockSpecs to the physical page (the slot-indirect `expert_ffn` idiom).
+    Unbacked table entries point at the null page; per-slot ``len_ref``
+    masking zeroes whatever garbage lives there."""
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0, 0].astype(jnp.float32)  # [G, hd]
+    k = k_ref[0, :, 0].astype(jnp.float32)  # [ps, hd]
+    v = v_ref[0, :, 0].astype(jnp.float32)  # [ps, hd]
+    hd = q.shape[-1]
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * (hd**-0.5)  # [G, ps]
+    if logit_cap > 0.0:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+    pos = j * page_size + jax.lax.broadcasted_iota(jnp.int32, (1, page_size), 1)
+    s = jnp.where(pos < len_ref[b], s, NEG_INF)
+
+    m_prev, l_prev = m_scr[...], l_scr[...]  # [G,1]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)  # [G, ps]
+    l_new = l_prev * corr + p.sum(axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jnp.dot(p, v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(j == num_kv_blocks - 1)
+    def _finish():
+        o_ref[0, 0, 0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_decode_attention_pallas(
+    q: jax.Array,  # [B, n_heads, hd] — one token per sequence
+    k_pages: jax.Array,  # [P, ps, n_kv, hd] — page pool
+    v_pages: jax.Array,  # [P, ps, n_kv, hd]
+    block_tables: jax.Array,  # [B, nblk] int32 — slot → page map
+    lengths: jax.Array,  # [B] int32 — per-slot valid lengths
+    *,
+    logit_cap: float = 0.0,
+    interpret: bool = True,
+) -> jax.Array:
+    """Paged flash decode.  Returns attention output [B, n_heads, hd].
+
+    Virtual block j of slot b streams physical page ``block_tables[b, j]``
+    through VMEM; pages are the KV blocks (block_kv == page_size), so the
+    online-softmax loop is identical to the contiguous kernel's."""
+    B, nh, hd = q.shape
+    P, ps, nkv, _ = k_pages.shape
+    G = nh // nkv
+    nblk = block_tables.shape[1]
+    qg = q.reshape(B, nkv, G, hd)[:, :, None, :, :]  # [B, nkv, 1, G, hd]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, nkv, nblk),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, G, hd), lambda b, h, j, bt, ln: (b, h, 0, 0, 0)),
+            pl.BlockSpec((1, ps, 1, hd), lambda b, h, j, bt, ln: (bt[b, j], 0, h, 0)),
+            pl.BlockSpec((1, ps, 1, hd), lambda b, h, j, bt, ln: (bt[b, j], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, G, hd), lambda b, h, j, bt, ln: (b, h, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(
+            _paged_decode_attn_kernel,
+            num_kv_blocks=nblk,
+            page_size=ps,
+            logit_cap=logit_cap,
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, nkv, 1, G, hd), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32), qg, k_pages, v_pages)
+
+    return out.reshape(B, nkv, G, hd).reshape(B, nh, hd)
+
+
 def decode_attention_pallas(
     q: jax.Array,  # [B, n_heads, hd] — one token per sequence
     k_cache: jax.Array,  # [B, S, n_kv, hd]

@@ -34,3 +34,31 @@ def decode_attention_int8_ref(q, k_cache, v_cache, k_scale, v_scale, valid_len, 
     k = k_cache.astype(jnp.float32) * k_scale[..., None].astype(jnp.float32)
     v = v_cache.astype(jnp.float32) * v_scale[..., None].astype(jnp.float32)
     return decode_attention_ref(q, k.astype(q.dtype), v.astype(q.dtype), valid_len, logit_cap)
+
+
+def paged_decode_attention_ref(
+    q: jax.Array,  # [B, nh, hd]
+    k_pages: jax.Array,  # [P, ps, nkv, hd]
+    v_pages: jax.Array,
+    block_tables: jax.Array,  # [B, nblk] int32
+    lengths: jax.Array,  # [B] int32 — per-slot valid lengths
+    logit_cap: float = 0.0,
+) -> jax.Array:
+    """Oracle for the paged kernel: gather each slot's pages into the dense
+    [B, S, nkv, hd] view (S = nblk · ps) and run per-slot masked attention."""
+    B, nh, hd = q.shape
+    ps, nkv = k_pages.shape[1], k_pages.shape[2]
+    nblk = block_tables.shape[1]
+    S = nblk * ps
+    k = k_pages[block_tables].reshape(B, S, nkv, hd).astype(jnp.float32)
+    v = v_pages[block_tables].reshape(B, S, nkv, hd).astype(jnp.float32)
+    G = nh // nkv
+    qg = q.reshape(B, nkv, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bngh,bsnh->bngs", qg, k) * (hd**-0.5)
+    if logit_cap > 0.0:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+    mask = jnp.arange(S)[None, :] < lengths[:, None]  # [B, S]
+    s = jnp.where(mask[:, None, None, :], s, -1.0e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bngs,bsnh->bngh", p, v)
+    return o.reshape(B, nh, hd).astype(q.dtype)

@@ -40,6 +40,16 @@ def main():
         "chunked prefill on the prefill pool, streamed KV hand-off",
     )
     ap.add_argument("--prefill-chunk", type=int, default=64, help="prefill chunk size (tokens)")
+    ap.add_argument(
+        "--kv-page-size", type=int, default=None, metavar="ROWS",
+        help="enable the paged KV cache with fixed-size pages of ROWS tokens "
+        "(must divide --cache-len); default keeps contiguous per-slot slabs",
+    )
+    ap.add_argument(
+        "--kv-num-pages", type=int, default=None,
+        help="page-pool size (incl. the reserved null page); default backs "
+        "every slot fully — shrink it to overcommit KV memory",
+    )
     ap.add_argument("--ping-pong", action="store_true", help="m=2 micro-batch overlap (disagg)")
     ap.add_argument(
         "--fault-plan", default=None, metavar="PATH",
@@ -96,6 +106,8 @@ def main():
         prefill_chunk=args.prefill_chunk,
         ping_pong=args.ping_pong,
         fault_plan=fault_plan,
+        kv_page_size=args.kv_page_size,
+        kv_num_pages=args.kv_num_pages,
     )
     print(
         f"serving {len(reqs)} requests on {cfg.name} "

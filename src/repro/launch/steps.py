@@ -165,6 +165,8 @@ def build_serving_engine(
     fault_plan=None,
     retry_policy=None,
     watchdog=None,
+    kv_page_size: Optional[int] = None,
+    kv_num_pages: Optional[int] = None,
     **engine_kw,
 ):
     """Launch-layer entry for a full fault-tolerant pool deployment: the
@@ -183,6 +185,7 @@ def build_serving_engine(
         executor="disagg", n_attn=n_attn, n_prefill=n_prefill,
         prefill_chunk=prefill_chunk,
         fault_plan=fault_plan, retry_policy=retry_policy, watchdog=watchdog,
+        kv_page_size=kv_page_size, kv_num_pages=kv_num_pages,
         **engine_kw,
     )
 

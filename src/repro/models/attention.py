@@ -155,11 +155,13 @@ def attention_cross(
 def attention_prefill_chunk(
     params: Params,
     x: jax.Array,  # [b, c, d] — one prompt chunk
-    cache_k: jax.Array,  # [b, S, nkv, hd] bf16
+    cache_k: jax.Array,  # [b, S, nkv, hd] bf16 (or int8 when cfg.kv_quant)
     cache_v: jax.Array,
     start: jax.Array,  # scalar int32 — absolute position of the chunk's first token
     cfg,
     window: Optional[int] = None,
+    k_scale: Optional[jax.Array] = None,  # [b, S, nkv] (int8 caches only)
+    v_scale: Optional[jax.Array] = None,
 ):
     """Chunked prefill: attend a c-token prompt chunk against the cache.
 
@@ -171,15 +173,23 @@ def attention_prefill_chunk(
     practice: per-token projections/rope are position-indexed, and masked
     cache entries contribute exact zeros to the softmax/PV reductions — the
     same padding argument :func:`attention_decode` already relies on).
-    Quantised (int8) caches are rejected: earlier chunks would be read back
-    through the int8 round-trip while :func:`attention_full` attends raw
-    keys, breaking that equivalence — ``supports_chunked_prefill`` gates
-    ``kv_quant`` configs to the whole-prompt fallback.
 
-    Returns ``(out [b,c,d], new_cache_k, new_cache_v)``.
+    Quantised (int8) caches use *chunk-boundary-deterministic* quantisation:
+    each chunk's keys/values are quantised once (per-token absmax over
+    head_dim — a per-row property, independent of how the prompt was
+    chunked), written to the cache, and every read — including the chunk
+    attending its own freshly written keys — goes through the int8
+    round-trip.  Raw keys are never re-read across a chunk boundary, so on
+    the non-window path the result is invariant to the chunk grid.  The
+    output differs from whole-prompt :func:`attention_full` (which attends
+    raw keys) by ordinary quantisation error; what serving relies on is the
+    determinism, which :func:`attention_decode` then matches by reading the
+    same int8 cache.
+
+    Returns ``(out, new_cache_k, new_cache_v)`` — plus
+    ``(new_k_scale, new_v_scale)`` when the cache is quantised.
     """
-    if cache_k.dtype == jnp.int8:
-        raise ValueError("chunked prefill does not support quantised KV caches")
+    quant = cache_k.dtype == jnp.int8
     b, c, _ = x.shape
     S = cache_k.shape[1]
     nkv = cfg.num_kv_heads
@@ -190,6 +200,13 @@ def attention_prefill_chunk(
     if cfg.use_rope:
         q = apply_rope(q, jnp.broadcast_to(pos, (b, c)), cfg.rope_theta)
         k = apply_rope(k, jnp.broadcast_to(pos, (b, c)), cfg.rope_theta)
+    if quant:
+        k_q, ks_q = quantize_kv(k)
+        v_q, vs_q = quantize_kv(v)
+        # The chunk attends its own keys through the same round-trip later
+        # reads will see — never the raw values.
+        k = dequantize_kv(k_q, ks_q, x.dtype)
+        v = dequantize_kv(v_q, vs_q, x.dtype)
     qg = _group_q(q, nkv)
     idx = jnp.arange(S)
     if window is not None:
@@ -211,18 +228,40 @@ def attention_prefill_chunk(
         )
         self_mask = (pos[None, :] <= pos[:, None]) & (pos[None, :] > pos[:, None] - window)
         mask = jnp.concatenate([cache_mask, self_mask], axis=1)  # [c, S+c]
-        k_r = jnp.concatenate([cache_k, k], axis=1)
-        v_r = jnp.concatenate([cache_v, v], axis=1)
+        if quant:
+            k_prev = dequantize_kv(cache_k, k_scale, x.dtype)
+            v_prev = dequantize_kv(cache_v, v_scale, x.dtype)
+        else:
+            k_prev, v_prev = cache_k, cache_v
+        k_r = jnp.concatenate([k_prev, k], axis=1)
+        v_r = jnp.concatenate([v_prev, v], axis=1)
         out = _attend(qg, k_r, v_r, mask[None, None, None], cfg.attn_logit_softcap)
         slots = pos % S
-        cache_k = cache_k.at[:, slots].set(k.astype(cache_k.dtype))
-        cache_v = cache_v.at[:, slots].set(v.astype(cache_v.dtype))
+        if quant:
+            cache_k = cache_k.at[:, slots].set(k_q)
+            cache_v = cache_v.at[:, slots].set(v_q)
+            k_scale = k_scale.at[:, slots].set(ks_q)
+            v_scale = v_scale.at[:, slots].set(vs_q)
+        else:
+            cache_k = cache_k.at[:, slots].set(k.astype(cache_k.dtype))
+            cache_v = cache_v.at[:, slots].set(v.astype(cache_v.dtype))
     else:
-        cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), start, axis=1)
-        cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), start, axis=1)
+        if quant:
+            cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k_q, start, axis=1)
+            cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v_q, start, axis=1)
+            k_scale = jax.lax.dynamic_update_slice_in_dim(k_scale, ks_q, start, axis=1)
+            v_scale = jax.lax.dynamic_update_slice_in_dim(v_scale, vs_q, start, axis=1)
+            k_att = dequantize_kv(cache_k, k_scale, x.dtype)
+            v_att = dequantize_kv(cache_v, v_scale, x.dtype)
+        else:
+            cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), start, axis=1)
+            cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), start, axis=1)
+            k_att, v_att = cache_k, cache_v
         mask = idx[None, :] <= pos[:, None]  # [c, S]: causal over cache + chunk
-        out = _attend(qg, cache_k, cache_v, mask[None, None, None], cfg.attn_logit_softcap)
+        out = _attend(qg, k_att, v_att, mask[None, None, None], cfg.attn_logit_softcap)
     y = jnp.einsum("bsnh,nhd->bsd", out, params["wo"])
+    if quant:
+        return y, cache_k, cache_v, k_scale, v_scale
     return y, cache_k, cache_v
 
 
@@ -241,13 +280,14 @@ def dequantize_kv(q: jax.Array, scale: jax.Array, dt) -> jax.Array:
 def attention_decode(
     params: Params,
     x: jax.Array,  # [b, 1, d]
-    cache_k: jax.Array,  # [b, S, nkv, hd]  (bf16, or int8 when cfg.kv_quant)
+    cache_k: jax.Array,  # [b, S, nkv, hd], or pages [P, ps, nkv, hd] (paged)
     cache_v: jax.Array,
     cache_index: jax.Array,  # scalar int32 — number of tokens already cached
     cfg,
     window: Optional[int] = None,
     k_scale: Optional[jax.Array] = None,  # [b, S, nkv] (int8 caches only)
     v_scale: Optional[jax.Array] = None,
+    block_tables: Optional[jax.Array] = None,  # [b, n_blocks] int32 (paged)
 ):
     """One-token decode against a (possibly rolling) KV cache.
 
@@ -255,9 +295,26 @@ def attention_decode(
     (per-request positions, continuous batching).  Keys are stored
     *post-rope* at absolute positions, so a rolling buffer needs no
     re-rotation.  Returns (out [b,1,d], new_cache_k, new_cache_v).
+
+    With ``block_tables`` the caches are page pools ``[P, ps, nkv, hd]``
+    (int8 scales ``[P, ps, nkv]``) indexed slot→page through the table: the
+    new token writes into page ``bt[b, pos // ps]`` at offset ``pos % ps``,
+    and reads gather the table's pages into the same ``[b, S, ...]`` view
+    the contiguous path attends — identical values at every unmasked
+    position, so paged decode is bit-identical to contiguous.  Unbacked
+    table entries point at the null page; its garbage rows sit strictly
+    beyond ``pos`` and contribute exact zeros through the mask.  Rolling
+    windows are not paged (their buffers are already window-bounded).
     """
     b = x.shape[0]
-    S = cache_k.shape[1]
+    paged = block_tables is not None
+    if paged:
+        if window is not None:
+            raise ValueError("paged KV caches do not support rolling windows")
+        ps = cache_k.shape[1]
+        S = block_tables.shape[1] * ps  # virtual per-slot length
+    else:
+        S = cache_k.shape[1]
     nkv = cfg.num_kv_heads
     per_req = jnp.ndim(cache_index) == 1
     pos = (
@@ -276,7 +333,16 @@ def attention_decode(
     else:
         k_w, v_w = k, v
     slot = pos % S if window is not None else pos  # [b, 1]
-    if per_req:
+    if paged:
+        bidx = jnp.arange(b)
+        pg = block_tables[bidx, pos[:, 0] // ps]  # [b] page of each writer
+        off = pos[:, 0] % ps
+        cache_k = cache_k.at[pg, off].set(k_w[:, 0].astype(cache_k.dtype))
+        cache_v = cache_v.at[pg, off].set(v_w[:, 0].astype(cache_v.dtype))
+        if quant:
+            k_scale = k_scale.at[pg, off].set(ks_w[:, 0])
+            v_scale = v_scale.at[pg, off].set(vs_w[:, 0])
+    elif per_req:
         bidx = jnp.arange(b)
         cache_k = cache_k.at[bidx, slot[:, 0]].set(k_w[:, 0].astype(cache_k.dtype))
         cache_v = cache_v.at[bidx, slot[:, 0]].set(v_w[:, 0].astype(cache_v.dtype))
@@ -293,7 +359,16 @@ def attention_decode(
     idx = jnp.arange(S)
     mask = idx[None, :] <= pos  # [b, S] (rolling buffers are full once wrapped)
     qg = _group_q(q, nkv)
-    if quant:
+    if paged:
+        def gather(pool):
+            return pool[block_tables].reshape(b, S, *pool.shape[2:])
+
+        if quant:
+            k_r = dequantize_kv(gather(cache_k), gather(k_scale), x.dtype)
+            v_r = dequantize_kv(gather(cache_v), gather(v_scale), x.dtype)
+        else:
+            k_r, v_r = gather(cache_k), gather(cache_v)
+    elif quant:
         k_r = dequantize_kv(cache_k, k_scale, x.dtype)
         v_r = dequantize_kv(cache_v, v_scale, x.dtype)
     else:

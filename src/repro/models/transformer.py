@@ -177,22 +177,28 @@ def attention_stage(lp, x, kv, cache_index, cfg, window=None, enc_out=None):
     → residual [→ cross-attention] → ln2.
 
     ``kv`` is a dict with keys ``k``/``v`` (plus ``k_scale``/``v_scale`` when
-    ``cfg.kv_quant``) holding this layer's cache.  Returns
+    ``cfg.kv_quant``, plus ``bt`` block tables when the cache is paged —
+    then ``k``/``v`` are page pools).  Returns
     ``(x_resid, h_ffn, new_kv)``: the post-attention residual stream, the
     normalised FFN input to hand to :func:`moe_stage`, and the updated cache.
     """
+    bt = kv.get("bt")
     h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
     if cfg.kv_quant:
         h, ck, cv, ks, vs = attn_mod.attention_decode(
             lp["attn"], h, kv["k"], kv["v"], cache_index, cfg,
             window=window, k_scale=kv["k_scale"], v_scale=kv["v_scale"],
+            block_tables=bt,
         )
         new_kv = {"k": ck, "v": cv, "k_scale": ks, "v_scale": vs}
     else:
         h, ck, cv = attn_mod.attention_decode(
-            lp["attn"], h, kv["k"], kv["v"], cache_index, cfg, window=window
+            lp["attn"], h, kv["k"], kv["v"], cache_index, cfg, window=window,
+            block_tables=bt,
         )
         new_kv = {"k": ck, "v": cv}
+    if bt is not None:
+        new_kv["bt"] = bt
     x = x + h
     if enc_out is not None:
         hx = rmsnorm(lp["ln_x"], x, cfg.norm_eps)
@@ -228,14 +234,22 @@ def attention_stage_chunk(lp, x, kv, start, cfg, window=None):
 
     Same contract as the other stages — ``(x_resid, h_ffn, new_kv)`` — so the
     prefill worker composes it with :func:`moe_stage` exactly like the decode
-    executors compose their halves.  (Quantised caches never reach here:
-    :func:`supports_chunked_prefill` routes them to whole-prompt prefill.)
+    executors compose their halves.  Quantised (``cfg.kv_quant``) caches
+    carry ``k_scale``/``v_scale`` through the same dict; the chunk is
+    quantised once at its boundary (see :func:`attention_prefill_chunk`).
     """
     h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
-    h, ck, cv = attn_mod.attention_prefill_chunk(
-        lp["attn"], h, kv["k"], kv["v"], start, cfg, window=window
-    )
-    new_kv = {"k": ck, "v": cv}
+    if cfg.kv_quant:
+        h, ck, cv, ks, vs = attn_mod.attention_prefill_chunk(
+            lp["attn"], h, kv["k"], kv["v"], start, cfg, window=window,
+            k_scale=kv["k_scale"], v_scale=kv["v_scale"],
+        )
+        new_kv = {"k": ck, "v": cv, "k_scale": ks, "v_scale": vs}
+    else:
+        h, ck, cv = attn_mod.attention_prefill_chunk(
+            lp["attn"], h, kv["k"], kv["v"], start, cfg, window=window
+        )
+        new_kv = {"k": ck, "v": cv}
     x = x + h
     h2 = rmsnorm(lp["ln2"], x, cfg.norm_eps)
     return x, h2, new_kv
@@ -382,8 +396,12 @@ def decode_step(
         a = caches[name]
         return a.reshape(n_periods, a.shape[0] // n_periods, *a.shape[1:])
 
+    # Block tables (paged "" caches) are slot-indexed, shared by every layer,
+    # and read-only inside the step — a scan closure constant, not a carried
+    # cache array.
+    block_tables = caches.get("block_tables")
     scan_caches = {
-        k: regroup(k) for k in caches if k not in ("enc_out",)
+        k: regroup(k) for k in caches if k not in ("enc_out", "block_tables")
     }
 
     # static per-kind position counters inside one period
@@ -400,6 +418,8 @@ def decode_step(
             if cfg.kv_quant:
                 kv["k_scale"] = scanned[kk + "_scale"][i]
                 kv["v_scale"] = scanned[vk + "_scale"][i]
+            if suffix == "" and block_tables is not None:
+                kv["bt"] = block_tables
             return kv
 
         def kv_write(suffix, i, new_kv):
@@ -474,6 +494,8 @@ def decode_step(
     }
     if enc_out is not None:
         out_caches["enc_out"] = enc_out
+    if block_tables is not None:
+        out_caches["block_tables"] = block_tables
     logits = lm_head(params, x[:, 0, :], cfg)
     return logits, out_caches
 
@@ -563,17 +585,20 @@ def prefill(
 
 def supports_chunked_prefill(cfg) -> bool:
     """Chunked prefill covers pure attention+FFN stacks (dense / dense_local /
-    moe) with unquantised KV caches.  Recurrent (ssm/hybrid) stacks consume
-    the prompt serially through a state that :func:`prefill_chunk` does not
-    carry, and encoder-decoder / frontend models need their encoder pass
-    first — those fall back to whole-prompt :func:`prefill`.  Quantised
-    caches are excluded because chunk queries would attend earlier chunks
-    through the int8 round-trip while whole-prompt :func:`prefill` attends
-    raw keys — breaking the bit-equivalence contract the prefill pipeline is
-    built on (the fallback keeps admission modes bit-identical there too)."""
+    moe), quantised or not.  Recurrent (ssm/hybrid) stacks consume the prompt
+    serially through a state that :func:`prefill_chunk` does not carry, and
+    encoder-decoder / frontend models need their encoder pass first — those
+    fall back to whole-prompt :func:`prefill`.
+
+    ``kv_quant`` configs use chunk-boundary-deterministic quantisation
+    (:func:`attention_prefill_chunk`): each chunk is quantised exactly once
+    and raw keys are never re-read across a boundary, so all serving paths —
+    which share the worker's fixed chunk grid — produce bit-identical
+    streams.  (The quantised result differs from whole-prompt
+    :func:`prefill`, which attends raw keys, by ordinary quantisation error;
+    determinism across admission modes / executors / replay is what the
+    serving contract requires, and that holds.)"""
     if cfg.encoder_layers or cfg.frontend or cfg.family in ("audio", "ssm", "hybrid"):
-        return False
-    if cfg.kv_quant:
         return False
     period, _ = period_pattern(cfg)
     return all(k in ("dense", "dense_local", "moe") for k in period)
@@ -616,11 +641,18 @@ def prefill_chunk(
         counters = {"full": 0, "local": 0}
 
         def kv_slice(suffix, i):
-            return {"k": scanned[f"kv_k{suffix}"][i], "v": scanned[f"kv_v{suffix}"][i]}
+            kv = {"k": scanned[f"kv_k{suffix}"][i], "v": scanned[f"kv_v{suffix}"][i]}
+            if cfg.kv_quant:
+                kv["k_scale"] = scanned[f"kv_k{suffix}_scale"][i]
+                kv["v_scale"] = scanned[f"kv_v{suffix}_scale"][i]
+            return kv
 
         def kv_write(suffix, i, new_kv):
             scanned[f"kv_k{suffix}"] = scanned[f"kv_k{suffix}"].at[i].set(new_kv["k"])
             scanned[f"kv_v{suffix}"] = scanned[f"kv_v{suffix}"].at[i].set(new_kv["v"])
+            if cfg.kv_quant:
+                scanned[f"kv_k{suffix}_scale"] = scanned[f"kv_k{suffix}_scale"].at[i].set(new_kv["k_scale"])
+                scanned[f"kv_v{suffix}_scale"] = scanned[f"kv_v{suffix}_scale"].at[i].set(new_kv["v_scale"])
 
         for pos, kind in enumerate(period):
             lp = scanned["blocks"][f"pos{pos}"]

@@ -49,6 +49,7 @@ class AutoScaler:
         hysteresis: float = 0.1,
         prefill_tok_rate: float = 0.0,  # prompt tokens/s one prefill device sustains
         n_prefill_max: Optional[int] = None,
+        kv_pressure_threshold: float = 0.9,  # paged-pool occupancy that forces +1 attn
     ):
         self.scaler = SLOScaler(model, n_max=n_max)
         self.slo = slo
@@ -56,9 +57,11 @@ class AutoScaler:
         self.hysteresis = hysteresis
         self.prefill_tok_rate = prefill_tok_rate
         self.n_prefill_max = n_prefill_max if n_prefill_max is not None else n_max
+        self.kv_pressure_threshold = kv_pressure_threshold
         self._arrivals: List[float] = []
         self._tokens: List[float] = []
         self._input_tokens: List[float] = []
+        self._kv_obs: List[tuple] = []  # (t, paged-pool occupancy) samples
         self.current: Optional[EvalResult] = None
         self.events: List[ScalingEvent] = []
         self.device_losses: List[tuple] = []  # (t, pool) permanent losses seen
@@ -82,12 +85,21 @@ class AutoScaler:
         )
 
     # -- demand estimation ---------------------------------------------------
-    def observe(self, t: float, tokens: float, input_tokens: float = 0.0) -> None:
+    def observe(
+        self,
+        t: float,
+        tokens: float,
+        input_tokens: float = 0.0,
+        kv_occupancy: float = 0.0,
+    ) -> None:
         """Log one arrival: ``tokens`` drives decode scaling, ``input_tokens``
-        (the prompt length) drives prefill-pool scaling."""
+        (the prompt length) drives prefill-pool scaling, ``kv_occupancy``
+        (paged-KV pool fill fraction, 0..1) drives memory-pressure scaling."""
         self._arrivals.append(t)
         self._tokens.append(tokens)
         self._input_tokens.append(input_tokens)
+        if kv_occupancy > 0.0:
+            self._kv_obs.append((t, float(kv_occupancy)))
 
     def demand(self, now: float) -> float:
         lo = now - self.window
@@ -99,6 +111,13 @@ class AutoScaler:
         lo = now - self.window
         tok = sum(tk for t, tk in zip(self._arrivals, self._input_tokens) if t >= lo)
         return tok / self.window
+
+    def kv_pressure(self, now: float) -> float:
+        """Worst paged-KV occupancy seen in the sliding window (0.0 if the
+        engine is not paged or no sample landed in the window)."""
+        lo = now - self.window
+        occ = [o for t, o in self._kv_obs if t >= lo]
+        return max(occ) if occ else 0.0
 
     def decide_prefill(self, now: float, demand: Optional[float] = None) -> Optional[int]:
         """Size the prefill pool independently of the decode pools: enough
@@ -128,6 +147,12 @@ class AutoScaler:
                 < self.hysteresis * lam
             ):
                 pass  # keep current if change is marginal — hysteresis
+        # memory pressure: a near-full paged-KV pool means attention devices
+        # are KV-bound even when latency looks fine — add one before admission
+        # starts rejecting (each attn device shards off part of the batch and
+        # its pages with it)
+        if best.feasible and self.kv_pressure(now) >= self.kv_pressure_threshold:
+            best = dataclasses.replace(best, n_a=min(best.n_a + 1, self.scaler.n_max))
         self.current = best
         self.events.append(
             ScalingEvent(now, lam, best.n_a, best.n_e, best.tpot, best.feasible)
@@ -152,6 +177,9 @@ class AutoScaler:
                 "actuate requires ServingEngine(executor='disagg'); "
                 "use decide() for advisory-only scaling"
             )
+        pages = engine.metrics().get("kv_pages")
+        if pages is not None:
+            self._kv_obs.append((now, float(pages.get("occupancy", 0.0))))
         best = self.decide(now)
         # prefill devices only pay off under pipelined admission — a blocking
         # engine would keep stalling the decode clock no matter the pool size

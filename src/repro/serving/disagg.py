@@ -52,6 +52,7 @@ from repro.models import model as model_mod
 from repro.models import moe as moe_mod
 from repro.models import transformer
 from repro.models.ffn import ffn
+from repro.serving.kv_cache import PagedKVCache
 
 _KV_KEYS = {"k": "kv_k", "v": "kv_v", "k_scale": "kv_k_scale", "v_scale": "kv_v_scale"}
 
@@ -96,6 +97,8 @@ class DisaggExecutor:
         ping_pong: bool = False,
         hw: HardwareSpec = TPU_V5E,
         devices: Optional[Sequence[jax.Device]] = None,
+        kv_page_size: Optional[int] = None,
+        kv_num_pages: Optional[int] = None,
     ):
         if not cfg.has_moe:
             raise ValueError("disagg executor requires an MoE architecture")
@@ -122,6 +125,13 @@ class DisaggExecutor:
         self.hw = hw
         self.max_batch = max_batch
         self.cache_len = cache_len
+        self.kv_page_size = kv_page_size
+        self.kv_num_pages = kv_num_pages
+        # per-shard page managers (local-row block tables); None = contiguous
+        self._pagers: Optional[List[PagedKVCache]] = None
+        # per-slot live KV length — executor-level so it survives re-sharding
+        # (reconfigure / drop_attn_device rebuild block tables from it)
+        self._slot_len = np.zeros(max_batch, np.int64)
         # fault-injection hook (repro.serving.faults): called before each
         # cross-pool exchange with (site, layer, micro_batch); may raise
         # PoolFault.  None (the default) keeps the fault-free path untouched.
@@ -227,21 +237,70 @@ class DisaggExecutor:
             jax.device_put(tree, dev) for dev in pools.attn_devices
         ]
 
-        # KV cache shards: per shard, per kv-layer, the engine cache rows
+        # KV cache shards: per shard, per kv-layer, the engine cache rows.
+        # Paged mode replaces each shard's [rows, S, ...] slabs with per-shard
+        # page pools [P, ps, ...] + a local-row block table, re-paginated from
+        # the dense input using the executor-level ``_slot_len`` — page ids
+        # change across re-shards, the position→value mapping never does.
         self._kv: List[List[Dict[str, jax.Array]]] = []
         n_kv_layers = len({c for *_x, c in self._layers})
-        for s in self.shards:
-            dev = pools.attn_devices[s.dev_index]
-            per_layer = []
-            for l in range(n_kv_layers):
-                per_layer.append(
-                    {
-                        short: jax.device_put(caches[name][l, s.lo : s.hi], dev)
-                        for short, name in _KV_KEYS.items()
-                        if name in caches
-                    }
-                )
-            self._kv.append(per_layer)
+        if self.kv_page_size is not None:
+            ps = self.kv_page_size
+            np_caches = {
+                name: np.asarray(caches[name])
+                for name in _KV_KEYS.values()
+                if name in caches
+            }
+            self._pagers = []
+            for s in self.shards:
+                dev = pools.attn_devices[s.dev_index]
+                if self.kv_num_pages is None:
+                    shard_pages = None  # full backing for the shard's rows
+                else:
+                    # split the operator's pool budget proportionally to rows
+                    # (each shard keeps its own null page)
+                    shard_pages = 1 + max(
+                        1, round((self.kv_num_pages - 1) * s.rows / self.max_batch)
+                    )
+                pager = PagedKVCache(s.rows, self.cache_len, ps, shard_pages)
+                for r in range(s.rows):
+                    ln = int(self._slot_len[s.lo + r])
+                    if ln > 0:
+                        pager.ensure(r, ln - 1)
+                bt = pager.table_device(dev)
+                per_layer = []
+                for l in range(n_kv_layers):
+                    layer = {}
+                    for short, name in _KV_KEYS.items():
+                        if name not in np_caches:
+                            continue
+                        src = np_caches[name][l]  # [B, S, ...]
+                        pool = np.zeros(
+                            (pager.num_pages, ps, *src.shape[2:]), src.dtype
+                        )
+                        for r in range(s.rows):
+                            ln = int(self._slot_len[s.lo + r])
+                            if ln > 0:
+                                pages, offs = pager.rows_of(r, 0, ln)
+                                pool[pages, offs] = src[s.lo + r, :ln]
+                        layer[short] = jax.device_put(jnp.asarray(pool), dev)
+                    layer["bt"] = bt
+                    per_layer.append(layer)
+                self._pagers.append(pager)
+                self._kv.append(per_layer)
+        else:
+            for s in self.shards:
+                dev = pools.attn_devices[s.dev_index]
+                per_layer = []
+                for l in range(n_kv_layers):
+                    per_layer.append(
+                        {
+                            short: jax.device_put(caches[name][l, s.lo : s.hi], dev)
+                            for short, name in _KV_KEYS.items()
+                            if name in caches
+                        }
+                    )
+                self._kv.append(per_layer)
 
         # exchange schedule (regime chosen per step; both plans precomputed)
         self._plans = {r: plan_exchange(self.pools, r) for r in ("case1", "case2")}
@@ -383,6 +442,20 @@ class DisaggExecutor:
         si = self.shards.index(shard)
         dev = self.pools.attn_devices[shard.dev_index]
         local = slot - shard.lo
+        self._slot_len[slot] = max(self._slot_len[slot], start + length)
+        if self._pagers is not None:
+            pager = self._pagers[si]
+            pager.ensure(local, start + length - 1)
+            pages, offs = pager.rows_of(local, start, length)
+            positions = start + np.arange(length)
+            for l, layer_kv in enumerate(self._kv[si]):
+                for short, name in _KV_KEYS.items():
+                    if short in layer_kv:
+                        rows = jax.device_put(one_caches[name][l, 0, positions], dev)
+                        layer_kv[short] = (
+                            layer_kv[short].at[pages, offs].set(rows.astype(layer_kv[short].dtype))
+                        )
+            return
         for l, layer_kv in enumerate(self._kv[si]):
             for short, name in _KV_KEYS.items():
                 if short in layer_kv:
@@ -392,24 +465,111 @@ class DisaggExecutor:
                         layer_kv[short].at[local, idx].set(rows.astype(layer_kv[short].dtype))
                     )
 
-    def load_caches(self, caches: Dict[str, jax.Array]) -> None:
-        """Adopt an engine-format stacked cache dict (re-shards onto the pool)."""
+    def load_caches(
+        self, caches: Dict[str, jax.Array], lengths: Optional[np.ndarray] = None
+    ) -> None:
+        """Adopt an engine-format stacked cache dict (re-shards onto the pool).
+        ``lengths`` (per-slot live rows) drives paged re-pagination; defaults
+        to treating every slot as fully live."""
+        if lengths is not None:
+            self._slot_len = np.asarray(lengths, np.int64).copy()
+        elif self.kv_page_size is not None:
+            self._slot_len = np.full(self.max_batch, self.cache_len, np.int64)
         self._build_attn_side(len(self.pools.attn_devices), caches=caches)
 
     def export_caches(self) -> Dict[str, jax.Array]:
-        """Reassemble the engine-format stacked cache dict (global row order)."""
+        """Reassemble the engine-format stacked cache dict (global row order).
+        Paged shards gather their pages back into dense rows (unbacked rows
+        come back as zeros), so the export format is layout-independent."""
         order = sorted(range(len(self.shards)), key=lambda i: self.shards[i].lo)
         out: Dict[str, jax.Array] = {}
         n_layers = len(self._kv[0])
+        host = jax.devices()[0]
         for short, name in _KV_KEYS.items():
             if short not in self._kv[0][0]:
                 continue
             per_layer = []
             for l in range(n_layers):
-                rows = [jax.device_put(self._kv[i][l][short], jax.devices()[0]) for i in order]
+                rows = []
+                for i in order:
+                    arr = jax.device_put(self._kv[i][l][short], host)
+                    if self._pagers is not None:
+                        pager = self._pagers[i]
+                        pool = np.asarray(arr)  # [P, ps, ...]
+                        dense = np.zeros(
+                            (pager.max_batch, pager.cache_len, *pool.shape[2:]),
+                            pool.dtype,
+                        )
+                        for r in range(pager.max_batch):
+                            nb = pager.slot_blocks(r)
+                            if nb:
+                                pages = pager.tables[r, :nb]
+                                dense[r, : nb * pager.page_size] = pool[pages].reshape(
+                                    nb * pager.page_size, *pool.shape[2:]
+                                )
+                        arr = jnp.asarray(dense)
+                    rows.append(arr)
                 per_layer.append(jnp.concatenate(rows, axis=0))
             out[name] = jnp.stack(per_layer)
         return out
+
+    # ------------------------------------------------------------------
+    # paged slot lifecycle
+    # ------------------------------------------------------------------
+    def _shard_of(self, slot: int) -> int:
+        return next(si for si, s in enumerate(self.shards) if s.lo <= slot < s.hi)
+
+    def ensure_slot_pages(self, slot: int, pos: int) -> None:
+        """Back ``slot``'s write position with a page (alloc on append)."""
+        self._slot_len[slot] = max(self._slot_len[slot], pos + 1)
+        if self._pagers is None:
+            return
+        si = self._shard_of(slot)
+        self._pagers[si].ensure(slot - self.shards[si].lo, pos)
+
+    def release_slot(self, slot: int) -> None:
+        """Free a released slot's pages and forget its live length."""
+        self._slot_len[slot] = 0
+        if self._pagers is None:
+            return
+        si = self._shard_of(slot)
+        self._pagers[si].release(slot - self.shards[si].lo)
+
+    def _sync_tables(self) -> None:
+        """Push dirty block tables into every layer's kv dict before decode."""
+        if self._pagers is None:
+            return
+        for si, pager in enumerate(self._pagers):
+            if pager.dirty:
+                dev = self.pools.attn_devices[self.shards[si].dev_index]
+                bt = pager.table_device(dev)
+                for layer_kv in self._kv[si]:
+                    layer_kv["bt"] = bt
+
+    def slot_lengths(self) -> np.ndarray:
+        """Per-slot live KV lengths (rows written), global row order."""
+        return self._slot_len.copy()
+
+    def page_stats(self) -> Optional[Dict[str, float]]:
+        """Aggregated page telemetry across the attention shards."""
+        if self._pagers is None:
+            return None
+        num_pages = sum(p.num_pages for p in self._pagers)
+        in_use = sum(p.allocator.in_use for p in self._pagers)
+        peak = sum(p.allocator.peak_in_use for p in self._pagers)
+        free = sum(p.allocator.num_free for p in self._pagers)
+        used_rows = sum(int(p.hiwater.sum()) for p in self._pagers)
+        alloc_rows = in_use * self.kv_page_size
+        allocatable = sum(p.num_pages - 1 for p in self._pagers)
+        return {
+            "page_size": self.kv_page_size,
+            "num_pages": num_pages,
+            "pages_in_use": in_use,
+            "pages_peak": peak,
+            "pages_free": free,
+            "occupancy": in_use / max(1, allocatable),
+            "fragmentation": 1.0 - used_rows / alloc_rows if alloc_rows else 0.0,
+        }
 
     # ------------------------------------------------------------------
     # reconfigure (§3.5): re-lower only the affected pool
@@ -529,6 +689,13 @@ class DisaggExecutor:
                 {k: jnp.zeros_like(v) for k, v in layer.items()}
                 for layer in self._kv[si]
             ]
+            if self._pagers is not None:
+                for r in range(s.rows):
+                    self._pagers[si].release(r)
+        if lost:
+            # the dead shard's pages (and their block tables) died with it —
+            # survivors re-paginate from zero length and replay rebuilds them
+            self._slot_len[np.asarray(lost)] = 0
         self.exclude_device("attn", dead)
         self.reconfigure(n_attn=n_attn - 1)
         return sorted(lost)
@@ -580,6 +747,7 @@ class DisaggExecutor:
         self, tokens, positions, collect_stage_times: bool = False
     ) -> Tuple[jax.Array, Dict]:
         """One batched decode step.  Returns (logits [b, vocab], telemetry)."""
+        self._sync_tables()
         cfg = self.cfg
         pools = self.pools
         dtype_bytes = jnp.dtype(jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32).itemsize

@@ -72,9 +72,13 @@ from repro.serving.faults import (
 from repro.serving.kv_cache import (
     ACTIVE,
     PREFILLING,
+    PagedKVCache,
     SlotManager,
+    make_paged_caches,
+    paginate_caches,
     scatter_prefill_caches,
     scatter_prefill_chunk_caches,
+    scatter_prefill_chunk_paged,
     zero_slots,
 )
 from repro.serving.prefill import PrefillEvent, PrefillWorker
@@ -117,6 +121,8 @@ class ServingEngine:
         retry_policy: Optional[RetryPolicy] = None,
         watchdog: Optional[Watchdog] = None,
         max_prefill_queue: Optional[int] = None,  # admission backpressure bound
+        kv_page_size: Optional[int] = None,  # page the "" KV caches (None = contiguous)
+        kv_num_pages: Optional[int] = None,  # pool size (default: full backing + null)
     ):
         self.cfg = cfg
         self.params = params
@@ -144,6 +150,9 @@ class ServingEngine:
                 "(a zero bound would close admission permanently)"
             )
         self.max_prefill_queue = max_prefill_queue
+        self.kv_page_size = kv_page_size
+        self.kv_num_pages = kv_num_pages
+        self.paged: Optional[PagedKVCache] = None  # mono-executor page manager
         self.faults: Optional[FaultRuntime] = None
         self.degraded_reason: Optional[str] = None
         # subscribers notified on permanent device loss: fn(fault, clock).
@@ -179,6 +188,7 @@ class ServingEngine:
                 max_batch=max_batch, cache_len=cache_len,
                 scheduler=SCHEDULERS[scheduler], capacity=capacity_tokens,
                 ping_pong=ping_pong,
+                kv_page_size=kv_page_size, kv_num_pages=kv_num_pages,
             )
             self.caches = None  # cache residency moves to the executor's pool
         elif executor == "mono":
@@ -188,6 +198,10 @@ class ServingEngine:
                     allow_reuse=len(jax.devices()) < n_prefill,
                 )
             self.caches = model_mod.init_decode_caches(cfg, max_batch, cache_len)
+            if kv_page_size is not None:
+                self.paged, self.caches = make_paged_caches(
+                    self.caches, max_batch, cache_len, kv_page_size, kv_num_pages
+                )
         else:
             raise ValueError(f"unknown executor: {executor}")
 
@@ -425,6 +439,7 @@ class ServingEngine:
             toks[slot, 0] = req.tokens_out[t]
             pos = np.full((self.max_batch,), self.cache_len - 1, np.int32)
             pos[slot] = req.input_len + t
+            self._ensure_slot_page(slot, req.input_len + t)
             if self.disagg is not None:
                 logits, _ = self.disagg.decode_step(
                     jnp.asarray(toks), jnp.asarray(pos)
@@ -454,6 +469,15 @@ class ServingEngine:
         caches = ex.export_caches()
         if lost_rows:
             caches = zero_slots(caches, lost_rows)
+        if self.kv_page_size is not None:
+            # re-paginate the dense export: fresh page ids, same position→
+            # value mapping, so replayed streams stay bit-identical
+            lengths = np.array(ex.slot_lengths(), np.int64)
+            if lost_rows:
+                lengths[np.asarray(lost_rows)] = 0
+            self.paged, caches = paginate_caches(
+                caches, lengths, self.kv_page_size, self.kv_num_pages
+            )
         self.caches = jax.device_put(caches, jax.devices()[0])
         self.disagg = None
         self.executor_name = "mono"
@@ -584,12 +608,58 @@ class ServingEngine:
                 self.disagg.scatter_prefill(one_caches, slot)
             else:
                 self.disagg.scatter_prefill_chunk(one_caches, slot, start, length)
+        elif self.paged is not None:
+            if length < 0:
+                # whole-prompt fallback: the prompt's rows are one big chunk;
+                # positionless state (ssm/enc_out) takes the contiguous path
+                start, length = 0, self.slots.slot_req[slot].input_len
+                rest = {
+                    k: v for k, v in one_caches.items() if not k.startswith("kv_")
+                }
+                if rest:
+                    self.caches = scatter_prefill_caches(self.caches, rest, slot)
+            self.caches = scatter_prefill_chunk_paged(
+                self.caches, one_caches, slot, start, length, self.paged
+            )
         elif length < 0:
             self.caches = scatter_prefill_caches(self.caches, one_caches, slot)
         else:
             self.caches = scatter_prefill_chunk_caches(
                 self.caches, one_caches, slot, start, length
             )
+
+    # ------------------------------------------------------------------
+    # paged-KV slot lifecycle
+    # ------------------------------------------------------------------
+    def _ensure_pages(self) -> None:
+        """Back every active slot's next write position with a page (alloc on
+        append) and refresh the device block table if anything changed."""
+        if self.paged is not None:
+            for s in self.slots.active_slots:
+                self.paged.ensure(s, int(self.slots.positions[s]))
+            if self.paged.dirty:
+                self.caches = dict(self.caches)
+                self.caches["block_tables"] = self.paged.table_device()
+        elif self.disagg is not None:
+            for s in self.slots.active_slots:
+                self.disagg.ensure_slot_pages(s, int(self.slots.positions[s]))
+
+    def _ensure_slot_page(self, slot: int, pos: int) -> None:
+        """Replay-path variant of :meth:`_ensure_pages` for a single slot."""
+        if self.paged is not None:
+            self.paged.ensure(slot, pos)
+            if self.paged.dirty:
+                self.caches = dict(self.caches)
+                self.caches["block_tables"] = self.paged.table_device()
+        elif self.disagg is not None:
+            self.disagg.ensure_slot_pages(slot, pos)
+
+    def _release_pages(self, slot: int) -> None:
+        """Free a released slot's pages (free-on-release)."""
+        if self.paged is not None:
+            self.paged.release(slot)
+        elif self.disagg is not None:
+            self.disagg.release_slot(slot)
 
     def _poll_prefill(self) -> None:
         """Advance the prefill pipeline and activate any finished requests
@@ -614,6 +684,7 @@ class ServingEngine:
     def _decode_iteration(self) -> None:
         if self.faults is not None:
             self._fault_preflight()
+        self._ensure_pages()
         positions = self.slots.positions_device()
         t0 = time.perf_counter()
         logits, tel = self._guarded_decode(positions)
@@ -640,6 +711,7 @@ class ServingEngine:
                     req.truncated = True  # context exhausted before target length
                 req.finished = self.clock
                 self.completed.append(self.slots.release(s))
+                self._release_pages(s)
         self.tokens = new
 
     # ------------------------------------------------------------------
@@ -724,6 +796,12 @@ class ServingEngine:
         out["rejected"] = len(self.rejected)
         out["decode_stall_time"] = self.decode_stall_time
         out["prefill_chunks"] = self.prefill_worker.chunks_done
+        if self.paged is not None:
+            out["kv_pages"] = self.paged.stats()
+        elif self.disagg is not None:
+            page_stats = self.disagg.page_stats()
+            if page_stats is not None:
+                out["kv_pages"] = page_stats
         if self.faults is not None:
             out["faults"] = self.faults.stats.as_dict()
             if self.degraded_reason is not None:

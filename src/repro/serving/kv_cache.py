@@ -27,6 +27,32 @@ would have without the fault.
 Inactive slots park their write position at ``cache_len - 1`` (a reserved
 scratch entry no live context may reach), so the batched decode step can run
 unconditionally without corrupting live entries.
+
+Paged KV storage (PagedAttention-style block indirection)
+---------------------------------------------------------
+
+The full-attention decode caches (``kv_k``/``kv_v`` and their int8 scales)
+can optionally be stored *page-indirectly* instead of as contiguous
+``[slots, cache_len]`` slabs: a shared pool of fixed-size pages
+(``[num_pages, page_size, ...]``) plus a per-slot **block table**
+(``[max_batch, cache_len // page_size]`` int32) mapping each slot's
+position block to a pool page.  Pages are allocated on append (prefill
+chunk / decode write) and freed on slot release, so resident KV memory
+tracks *live* context instead of ``slots × cache_len`` — the stranded-
+memory recovery that lets the attention pool host several times more
+concurrent slots at the same budget.
+
+Page 0 is the reserved **null page**: unallocated block-table entries point
+at it, and the parked scratch write of inactive slots lands in it.  Rows
+read through the null page (or through a page's unwritten tail) are always
+masked by the position-bounded attention mask, so paged and contiguous
+layouts are bit-identical for every live stream.
+
+:class:`PageAllocator` owns the free list; :class:`PagedKVCache` owns the
+block tables and the slot lifecycle (``ensure``/``release``), plus the
+dense↔paged conversion used by reconfigure/degrade migration.  Rolling-
+window (``_local``), hybrid and recurrent caches stay contiguous — their
+buffers are already bounded by the window/state size.
 """
 
 from __future__ import annotations
@@ -157,20 +183,32 @@ def scatter_prefill_caches(
 
 
 def zero_slots(
-    batch_caches: Dict[str, jax.Array], slots: List[int]
+    batch_caches: Dict[str, jax.Array],
+    slots: List[int],
+    paged: Optional["PagedKVCache"] = None,
 ) -> Dict[str, jax.Array]:
     """Destroy the KV rows of ``slots`` (batch axis 1; ``enc_out`` axis 0).
 
     Fault-recovery helper: when an attention shard dies, the slots it hosted
     are *actually* zeroed before re-sharding, so recovery tests prove the
     deterministic re-prefill replay rebuilt the state rather than silently
-    reading rows a real failure would have destroyed."""
+    reading rows a real failure would have destroyed.
+
+    With a ``paged`` manager, the page-pool caches (:data:`PAGED_KEYS`) zero
+    the *pages owned by* those slots instead of batch rows — same observable
+    destruction, block-indirect layout."""
     if not slots:
         return batch_caches
     idx = np.asarray(slots)
     out = dict(batch_caches)
     for k, v in batch_caches.items():
-        if k == "enc_out":
+        if k == "block_tables":
+            continue  # the mapping survives; its pages' contents are wiped
+        if paged is not None and k in PAGED_KEYS:
+            pages = paged.pages_of(slots)
+            if len(pages):
+                out[k] = v.at[:, pages].set(0)
+        elif k == "enc_out":
             out[k] = v.at[idx].set(0)
         else:
             out[k] = v.at[:, idx].set(0)
@@ -207,4 +245,293 @@ def scatter_prefill_chunk_caches(
         out[k] = batch_caches[k].at[:, slot, rows].set(
             v[:, 0, rows].astype(batch_caches[k].dtype)
         )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Paged KV storage
+# ---------------------------------------------------------------------------
+
+# The cache keys stored page-indirectly: the full-attention ("" suffix) KV
+# plus its int8 scales.  Rolling-window / hybrid / recurrent caches keep the
+# contiguous per-slot layout (their buffers are window- or state-bounded).
+PAGED_KEYS = ("kv_k", "kv_v", "kv_k_scale", "kv_v_scale")
+
+NULL_PAGE = 0  # reserved: unallocated block-table entries point here
+
+
+class PageAllocator:
+    """Free-list allocator over pages ``1 .. num_pages-1`` (page 0 is the
+    reserved null page).  Tracks in-use and peak counts for telemetry and
+    raises on exhaustion / double free so leaks surface loudly."""
+
+    def __init__(self, num_pages: int):
+        if num_pages < 2:
+            raise ValueError(f"need ≥ 2 pages (one null + one usable), got {num_pages}")
+        self.num_pages = num_pages
+        # pop() hands out low page ids first — keeps pools dense and makes
+        # allocation order deterministic (replay/migration tests rely on it)
+        self._free: List[int] = list(range(num_pages - 1, 0, -1))
+        self._owned: set = set()
+        self.peak_in_use = 0
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return len(self._owned)
+
+    def alloc(self) -> int:
+        if not self._free:
+            raise RuntimeError(
+                f"out of KV pages ({self.num_pages - 1} allocatable, all in "
+                "use) — raise kv_num_pages or lower the admitted batch"
+            )
+        p = self._free.pop()
+        self._owned.add(p)
+        self.peak_in_use = max(self.peak_in_use, len(self._owned))
+        return p
+
+    def free(self, page: int) -> None:
+        if page not in self._owned:
+            raise RuntimeError(f"double free / foreign page {page}")
+        self._owned.remove(page)
+        self._free.append(page)
+
+
+class PagedKVCache:
+    """Block tables + page lifecycle for one batched paged cache pool.
+
+    Host-side manager: numpy block tables ``[max_batch, blocks_per_slot]``
+    (entry 0 = null page), a :class:`PageAllocator`, and per-slot high-water
+    marks (rows written) for fragmentation accounting.  ``table_device()``
+    returns a device copy, re-uploaded only when the tables changed."""
+
+    def __init__(
+        self,
+        max_batch: int,
+        cache_len: int,
+        page_size: int,
+        num_pages: Optional[int] = None,
+    ):
+        if page_size < 1:
+            raise ValueError(f"page_size must be ≥ 1, got {page_size}")
+        if cache_len % page_size:
+            raise ValueError(
+                f"cache_len ({cache_len}) must be a multiple of the KV page "
+                f"size ({page_size}) so prefill chunks land on page boundaries"
+            )
+        self.max_batch = max_batch
+        self.cache_len = cache_len
+        self.page_size = page_size
+        self.blocks_per_slot = cache_len // page_size
+        if num_pages is None:
+            num_pages = max_batch * self.blocks_per_slot + 1  # full backing
+        self.num_pages = num_pages
+        self.allocator = PageAllocator(num_pages)
+        self.tables = np.full((max_batch, self.blocks_per_slot), NULL_PAGE, np.int32)
+        self._owned: List[List[int]] = [[] for _ in range(max_batch)]
+        self.hiwater = np.zeros(max_batch, np.int64)  # rows written per slot
+        self._dirty = True
+        self._dev: Optional[jax.Array] = None
+        self._dev_device = None
+
+    # -- slot lifecycle ------------------------------------------------------
+    def ensure(self, slot: int, upto_pos: int) -> bool:
+        """Allocate pages so positions ``[0, upto_pos]`` of ``slot`` are
+        backed.  Idempotent; returns True when the table changed."""
+        if not 0 <= upto_pos < self.cache_len:
+            raise ValueError(f"position {upto_pos} outside cache_len {self.cache_len}")
+        need = upto_pos // self.page_size + 1
+        owned = self._owned[slot]
+        changed = False
+        while len(owned) < need:
+            page = self.allocator.alloc()
+            self.tables[slot, len(owned)] = page
+            owned.append(page)
+            changed = True
+        self.hiwater[slot] = max(self.hiwater[slot], upto_pos + 1)
+        if changed:
+            self._dirty = True
+        return changed
+
+    def release(self, slot: int) -> None:
+        """Free every page of ``slot`` (alloc-on-append / free-on-release)."""
+        for page in self._owned[slot]:
+            self.allocator.free(page)
+        if self._owned[slot]:
+            self._dirty = True
+        self._owned[slot] = []
+        self.tables[slot, :] = NULL_PAGE
+        self.hiwater[slot] = 0
+
+    def rows_of(self, slot: int, start: int, length: int):
+        """(pages, offsets) addressing positions ``[start, start+length)``
+        of ``slot``.  Callers must :meth:`ensure` coverage first."""
+        positions = start + np.arange(length)
+        blocks = positions // self.page_size
+        if len(positions) and blocks[-1] >= len(self._owned[slot]):
+            raise RuntimeError(
+                f"slot {slot} rows [{start}, {start + length}) not page-backed"
+            )
+        return self.tables[slot, blocks], positions % self.page_size
+
+    def pages_of(self, slots: List[int]) -> np.ndarray:
+        """All pool pages owned by ``slots`` (for targeted zeroing)."""
+        pages = [p for s in slots for p in self._owned[s]]
+        return np.asarray(sorted(pages), np.int64)
+
+    def slot_blocks(self, slot: int) -> int:
+        return len(self._owned[slot])
+
+    # -- device view ---------------------------------------------------------
+    def table_device(self, device=None) -> jax.Array:
+        if self._dirty or self._dev is None or device is not self._dev_device:
+            arr = jnp.asarray(self.tables)
+            self._dev = jax.device_put(arr, device) if device is not None else arr
+            self._dev_device = device
+            self._dirty = False
+        return self._dev
+
+    @property
+    def dirty(self) -> bool:
+        return self._dirty
+
+    # -- telemetry -----------------------------------------------------------
+    def stats(self) -> Dict[str, float]:
+        """Pool health for ``metrics()["kv_pages"]``: counts, occupancy of
+        the allocatable pool, and internal fragmentation (the unwritten tail
+        of allocated pages)."""
+        in_use = self.allocator.in_use
+        used_rows = int(self.hiwater.sum())
+        alloc_rows = in_use * self.page_size
+        return {
+            "page_size": self.page_size,
+            "num_pages": self.num_pages,
+            "pages_in_use": in_use,
+            "pages_peak": self.allocator.peak_in_use,
+            "pages_free": self.allocator.num_free,
+            "occupancy": in_use / max(1, self.num_pages - 1),
+            "fragmentation": 1.0 - used_rows / alloc_rows if alloc_rows else 0.0,
+        }
+
+
+def make_paged_caches(
+    caches: Dict[str, jax.Array],
+    max_batch: int,
+    cache_len: int,
+    page_size: int,
+    num_pages: Optional[int] = None,
+):
+    """Convert freshly-initialised engine caches to the paged layout.
+
+    The :data:`PAGED_KEYS` arrays ``[L, B, S, ...]`` are replaced by page
+    pools ``[L, num_pages, page_size, ...]`` plus a ``block_tables`` entry;
+    every other cache keeps its contiguous layout.  Returns
+    ``(PagedKVCache, new_caches)``."""
+    if "kv_k" not in caches:
+        raise ValueError(
+            "kv_page_size set but this architecture has no full-attention "
+            "KV cache to page (only rolling/recurrent state)"
+        )
+    pager = PagedKVCache(max_batch, cache_len, page_size, num_pages)
+    out = dict(caches)
+    for k in PAGED_KEYS:
+        if k in caches:
+            v = caches[k]
+            out[k] = jnp.zeros(
+                (v.shape[0], pager.num_pages, page_size, *v.shape[3:]), v.dtype
+            )
+    out["block_tables"] = pager.table_device()
+    return pager, out
+
+
+def scatter_prefill_chunk_paged(
+    batch_caches: Dict[str, jax.Array],
+    one_caches: Dict[str, jax.Array],
+    slot: int,
+    start: int,
+    length: int,
+    pager: PagedKVCache,
+) -> Dict[str, jax.Array]:
+    """Paged analogue of :func:`scatter_prefill_chunk_caches`: the chunk's
+    rows of the :data:`PAGED_KEYS` land in ``slot``'s pages (allocated on
+    demand — chunks land on page boundaries because the worker's chunk size
+    and the page size both divide ``cache_len``); any other streamed KV key
+    (e.g. a rolling ``_local`` cache) takes the contiguous row path."""
+    pager.ensure(slot, start + length - 1)
+    out = dict(batch_caches)
+    positions = start + np.arange(length)
+    pages, offs = pager.rows_of(slot, start, length)
+    for k, v in one_caches.items():
+        if not k.startswith("kv_"):
+            continue
+        if k in PAGED_KEYS:
+            out[k] = batch_caches[k].at[:, pages, offs].set(
+                v[:, 0, positions].astype(batch_caches[k].dtype)
+            )
+        else:
+            S_k = v.shape[2]
+            st, ln = start, length
+            if ln > S_k:  # whole-prompt hand-off into a shorter rolling buffer
+                st, ln = start + ln - S_k, S_k
+            rows = chunk_rows(S_k, st, ln)
+            out[k] = batch_caches[k].at[:, slot, rows].set(
+                v[:, 0, rows].astype(batch_caches[k].dtype)
+            )
+    out["block_tables"] = pager.table_device()
+    return out
+
+
+def paginate_caches(
+    caches: Dict[str, jax.Array],
+    lengths: np.ndarray,
+    page_size: int,
+    num_pages: Optional[int] = None,
+):
+    """Re-paginate dense engine caches (e.g. a disagg ``export_caches``
+    during degrade-to-mono): allocate pages for each slot's live ``lengths``
+    rows and copy them in.  Page *ids* are freshly assigned, but the
+    position→value mapping is preserved exactly, so replayed streams stay
+    bit-identical.  Returns ``(PagedKVCache, paged_caches)``."""
+    B = caches["kv_k"].shape[1]
+    S = caches["kv_k"].shape[2]
+    pager, out = make_paged_caches(caches, B, S, page_size, num_pages)
+    for slot in range(B):
+        ln = int(lengths[slot])
+        if ln <= 0:
+            continue
+        pager.ensure(slot, ln - 1)
+        pages, offs = pager.rows_of(slot, 0, ln)
+        for k in PAGED_KEYS:
+            if k in caches:
+                out[k] = out[k].at[:, pages, offs].set(caches[k][:, slot, :ln])
+    out["block_tables"] = pager.table_device()
+    return pager, out
+
+
+def depaginate_caches(
+    paged_caches: Dict[str, jax.Array], pager: PagedKVCache
+) -> Dict[str, jax.Array]:
+    """Inverse of :func:`paginate_caches`: gather each slot's pages back into
+    dense ``[L, B, S, ...]`` rows (unbacked rows come back as zeros)."""
+    out = {k: v for k, v in paged_caches.items() if k != "block_tables"}
+    for k in PAGED_KEYS:
+        if k not in paged_caches:
+            continue
+        pool = np.asarray(paged_caches[k])  # [L, P, ps, ...]
+        L = pool.shape[0]
+        dense = np.zeros(
+            (L, pager.max_batch, pager.cache_len, *pool.shape[3:]), pool.dtype
+        )
+        for slot in range(pager.max_batch):
+            nb = pager.slot_blocks(slot)
+            if not nb:
+                continue
+            pages = pager.tables[slot, :nb]
+            rows = pool[:, pages].reshape(L, nb * pager.page_size, *pool.shape[3:])
+            dense[:, slot, : nb * pager.page_size] = rows
+        out[k] = jnp.asarray(dense)
     return out

@@ -1,0 +1,413 @@
+"""Paged KV cache: allocator invariants, paged↔contiguous bit-exactness
+across executors (mono / disagg / fault replay / rolling-window stacks),
+the paged Pallas decode kernel vs its oracle, and the operator surface
+(CLI flag, page telemetry, autoscaler memory pressure).
+
+The load-bearing claim everywhere: page indirection is *storage only* —
+identical values land at identical unmasked positions, so greedy token
+streams are bit-identical to the contiguous baseline by construction.
+"""
+
+import dataclasses
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypo import given, settings, st
+
+from repro.configs import get_config
+from repro.models import model as model_mod
+from repro.serving.engine import ServingEngine
+from repro.serving.kv_cache import (
+    NULL_PAGE,
+    PAGED_KEYS,
+    PageAllocator,
+    PagedKVCache,
+    depaginate_caches,
+    make_paged_caches,
+    paginate_caches,
+    zero_slots,
+)
+from repro.serving.request import WorkloadSpec, sample_requests
+
+PS = 16  # page size used throughout
+
+
+# ---------------------------------------------------------------------------
+# allocator / page-table invariants
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    st.lists(st.integers(min_value=0, max_value=7), min_size=1, max_size=120),
+    st.integers(min_value=2, max_value=9),
+)
+def test_page_allocator_never_leaks_or_double_assigns(ops, num_pages):
+    """Any alloc/free interleaving: pages are never handed out twice, the
+    null page is never handed out, and free + in-use always account for the
+    whole pool (no leaks)."""
+    alloc = PageAllocator(num_pages)
+    held = []
+    for op in ops:
+        if op % 2 and held:
+            alloc.free(held.pop(op % len(held)))
+        else:
+            try:
+                p = alloc.alloc()
+            except RuntimeError:
+                assert alloc.num_free == 0
+                continue
+            assert p != NULL_PAGE and 1 <= p < num_pages
+            assert p not in held  # double-assignment
+            held.append(p)
+        assert alloc.num_free + alloc.in_use == num_pages - 1
+        assert alloc.in_use == len(held)
+        assert alloc.peak_in_use >= alloc.in_use
+    for p in held:
+        alloc.free(p)
+    assert alloc.in_use == 0 and alloc.num_free == num_pages - 1
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    st.lists(
+        st.tuples(st.integers(min_value=0, max_value=3),
+                  st.integers(min_value=0, max_value=47)),
+        min_size=1, max_size=80,
+    )
+)
+def test_paged_kv_cache_alloc_free_roundtrip(ops):
+    """Random ensure/release over 4 slots: no page is ever owned by two
+    slots, block tables mirror ownership exactly, and releasing everything
+    returns the pool to empty."""
+    pager = PagedKVCache(4, 48, 8)
+    for slot, pos in ops:
+        if pos % 5 == 0:
+            pager.release(slot)
+        else:
+            pager.ensure(slot, pos)
+        flat = list(pager.pages_of(range(4)))
+        assert len(flat) == len(set(flat))  # no page owned by two slots
+        for s in range(4):
+            n = pager.slot_blocks(s)
+            assert sorted(pager.tables[s, :n]) == sorted(pager.pages_of([s]))
+            assert all(pager.tables[s, n:] == NULL_PAGE)
+    for s in range(4):
+        pager.release(s)
+    st_ = pager.stats()
+    assert st_["pages_in_use"] == 0
+    assert st_["pages_free"] == st_["num_pages"] - 1
+
+
+def test_paged_kv_cache_basics():
+    pager = PagedKVCache(2, 64, PS, num_pages=5)
+    assert pager.blocks_per_slot == 4
+    changed = pager.ensure(0, 0)
+    assert changed and list(pager.pages_of([0])) == [1]  # low ids first
+    assert not pager.ensure(0, PS - 1)  # same page — nothing to do
+    pager.ensure(0, 2 * PS - 1)
+    pages, offs = pager.rows_of(0, PS - 2, 3)
+    assert list(pages) == [1, 1, 2] and list(offs) == [PS - 2, PS - 1, 0]
+    with pytest.raises(RuntimeError, match="not page-backed"):
+        pager.rows_of(0, 2 * PS, 1)
+    with pytest.raises(ValueError):
+        pager.ensure(0, 64)  # past cache_len
+    # pool exhaustion: 4 usable pages, slot 0 holds 2
+    pager.ensure(1, 2 * PS - 1)
+    with pytest.raises(RuntimeError, match="out of KV pages"):
+        pager.ensure(1, 3 * PS - 1)
+    st_ = pager.stats()
+    assert st_["pages_in_use"] == 4 and st_["pages_peak"] == 4
+    pager.release(0)
+    assert pager.stats()["pages_in_use"] == 2
+    with pytest.raises(ValueError, match="page boundaries"):
+        PagedKVCache(2, 60, PS)
+
+
+def test_make_paged_caches_requires_full_attention_kv():
+    cfg = get_config("falcon-mamba-7b-reduced")  # recurrent: no kv_k cache
+    caches = model_mod.init_decode_caches(cfg, 2, 32)
+    with pytest.raises(ValueError, match="no full-attention KV cache"):
+        make_paged_caches(caches, 2, 32, PS)
+
+
+def test_paginate_depaginate_roundtrip_and_zero_slots():
+    rng = np.random.default_rng(0)
+    L, B, S, nkv, hd = 2, 3, 48, 2, 4
+    dense = {
+        "kv_k": jnp.asarray(rng.standard_normal((L, B, S, nkv, hd)), jnp.float32),
+        "kv_v": jnp.asarray(rng.standard_normal((L, B, S, nkv, hd)), jnp.float32),
+    }
+    lengths = np.array([5, 0, 33])
+    pager, paged = paginate_caches(dense, lengths, 8)
+    assert "block_tables" in paged
+    back = depaginate_caches(paged, pager)
+    for k in dense:
+        for b, ln in enumerate(lengths):
+            np.testing.assert_array_equal(
+                np.asarray(back[k][:, b, :ln]), np.asarray(dense[k][:, b, :ln]),
+                err_msg=f"{k} slot {b}",
+            )
+    # zero_slots on a paged dict clears exactly the slot's pages
+    paged = zero_slots(paged, [2], paged=pager)
+    back2 = depaginate_caches(paged, pager)
+    assert not np.asarray(back2["kv_k"][:, 2]).any()
+    np.testing.assert_array_equal(
+        np.asarray(back2["kv_k"][:, 0, :5]), np.asarray(dense["kv_k"][:, 0, :5])
+    )
+
+
+# ---------------------------------------------------------------------------
+# engine-level bit-exactness: paged vs contiguous
+# ---------------------------------------------------------------------------
+
+
+def _reqs(cfg, n=5, seed=0, mean_out=8, max_in=16, max_out=12):
+    spec = WorkloadSpec(mean_input=6, mean_output=mean_out, vocab_size=cfg.vocab_size,
+                        max_input=max_in, max_output=max_out, seed=seed)
+    return sample_requests(spec, np.linspace(0, 0.01, n), with_prompts=True)
+
+
+def _streams(eng):
+    return {r.rid: tuple(r.tokens_out) for r in eng.completed}
+
+
+def _run_pair(cfg, reqs_fn, **kw):
+    """Run the same workload paged and contiguous; return both engines."""
+    engines = {}
+    for name, extra in (("contig", {}), ("paged", {"kv_page_size": PS})):
+        eng = ServingEngine(cfg, model_mod.init_params(cfg, 0), **kw, **extra)
+        m = eng.run(reqs_fn(), max_steps=4000)
+        assert m["completed"] == len(eng.completed) and m["completed"] > 0
+        engines[name] = (eng, m)
+    return engines
+
+
+def test_mono_paged_streams_bit_identical_dense():
+    cfg = get_config("phi4-mini-3.8b-reduced")
+    engines = _run_pair(cfg, lambda: _reqs(cfg, 5), max_batch=3, cache_len=64,
+                        scheduler="none", step_time_fn=lambda n: 2e-3)
+    assert _streams(engines["paged"][0]) == _streams(engines["contig"][0])
+    pages = engines["paged"][1]["kv_pages"]
+    assert pages["pages_peak"] > 0
+    assert pages["pages_in_use"] == 0  # free-on-release drained the pool
+    assert "kv_pages" not in engines["contig"][1]
+
+
+def test_mono_paged_streams_bit_identical_moe():
+    """Scheduled-MoE mono path under ample capacity (paged inactive slots
+    attend masked garbage — ample capacity keeps routing independent)."""
+    from repro.core.amax import make_routing_trace
+    from repro.core.placement import build_layout
+
+    cfg = get_config("qwen2-moe-a2.7b-reduced")
+    trace = make_routing_trace(512, cfg.num_experts, cfg.top_k, skew=0.8, seed=0)
+    layout = build_layout(trace, cfg.num_experts, num_instances=2, capacity=3)
+    engines = _run_pair(cfg, lambda: _reqs(cfg, 4), max_batch=2, cache_len=64,
+                        layout=layout, scheduler="aebs", capacity_tokens=64,
+                        step_time_fn=lambda n: 2e-3)
+    assert _streams(engines["paged"][0]) == _streams(engines["contig"][0])
+
+
+def test_window_arch_paged_wrap_streams_bit_identical():
+    """gemma2 (dense_local/dense periods): the paged '' cache rides next to
+    the *contiguous* rolling `_local` cache, with prompts long enough to wrap
+    the 64-token window."""
+    cfg = get_config("gemma2-2b-reduced")
+
+    def reqs():
+        spec = WorkloadSpec(mean_input=72, mean_output=6, vocab_size=cfg.vocab_size,
+                            max_input=100, max_output=8, seed=2)
+        rs = sample_requests(spec, np.linspace(0, 0.01, 3), with_prompts=True)
+        assert any(r.input_len > cfg.sliding_window for r in rs)  # wrap regime
+        return rs
+
+    engines = _run_pair(cfg, reqs, max_batch=2, cache_len=128,
+                        scheduler="none", step_time_fn=lambda n: 2e-3)
+    assert _streams(engines["paged"][0]) == _streams(engines["contig"][0])
+
+
+@pytest.fixture(scope="module")
+def dsv2():
+    cfg = get_config("dsv2-lite-reduced")
+    from repro.core.aebs import ReplicaLayout
+
+    params = model_mod.init_params(cfg, 0)
+    layout = ReplicaLayout.round_robin(cfg.num_experts, 2, 3)
+    return cfg, params, layout
+
+
+def _disagg_engine(cfg, params, layout, **kw):
+    return ServingEngine(
+        cfg, params, max_batch=4, cache_len=64, layout=layout,
+        scheduler="aebs", capacity_tokens=64,
+        executor="disagg", n_attn=2, n_prefill=1, prefill_chunk=4,
+        step_time_fn=lambda n: 2e-3, **kw,
+    )
+
+
+def test_disagg_paged_streams_and_reconfigure_migration(dsv2):
+    """Batch-sharded paged caches on the attention pool serve the same
+    streams as contiguous disagg, including across a mid-run attention-pool
+    re-shard (block tables migrate with their pages)."""
+    cfg, params, layout = dsv2
+    streams = {}
+    for name, extra in (("contig", {}), ("paged", {"kv_page_size": PS})):
+        eng = _disagg_engine(cfg, params, layout, **extra)
+        m1 = eng.run(_reqs(cfg, 5), max_steps=2000)
+        assert m1["completed"] == 5
+        s1 = _streams(eng)
+        # re-shard the attention pool mid-deployment, then serve more
+        eng.reconfigure(n_attn=3)
+        eng.completed.clear()
+        m2 = eng.run(_reqs(cfg, 4, seed=7), max_steps=2000)
+        assert m2["completed"] == 4
+        streams[name] = (s1, _streams(eng))
+        if name == "paged":
+            assert m2["kv_pages"]["pages_in_use"] == 0
+            assert m2["kv_pages"]["pages_peak"] > 0
+    assert streams["paged"] == streams["contig"]
+
+
+def test_disagg_paged_attn_loss_replay_bit_identical(dsv2):
+    """The PR 4 attention-loss path on a paged deployment: a dead shard
+    takes its pages with it; survivors re-shard (tables migrate), lost slots
+    replay deterministically, and the streams stay bit-identical to both the
+    fault-free paged run and the contiguous baseline."""
+    from repro.serving.faults import DEVICE_LOSS, FaultPlan, FaultSpec, RetryPolicy
+
+    cfg, params, layout = dsv2
+    runs = {}
+    plan = lambda: FaultPlan(
+        faults=[FaultSpec(DEVICE_LOSS, pool="attn", index=1, at_step=6)]
+    )
+    for name, kw in (
+        ("contig", {}),
+        ("paged", {"kv_page_size": PS}),
+        ("paged_fault", {"kv_page_size": PS, "fault_plan": plan(),
+                         "retry_policy": RetryPolicy(recovery_charge_s=0.01)}),
+    ):
+        eng = _disagg_engine(cfg, params, layout, **kw)
+        m = eng.run(_reqs(cfg, 5, mean_out=16, max_out=24), max_steps=2000)
+        assert m["completed"] == 5
+        runs[name] = (_streams(eng), m)
+    assert runs["paged"][0] == runs["contig"][0]
+    assert runs["paged_fault"][0] == runs["contig"][0]
+    f = runs["paged_fault"][1]["faults"]
+    assert f["recoveries"] == 1 and f["degraded"] == 0 and f["replayed_slots"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# paged decode kernel vs oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["pallas", "jnp"])
+@pytest.mark.parametrize("logit_cap", [0.0, 30.0])
+def test_paged_kernel_matches_dense_reference(backend, logit_cap):
+    """Both backends (interpreted Pallas kernel / jnp gather oracle) must
+    reproduce the *dense* flash-decode reference on the gathered view —
+    per-slot lengths, null-page padding and all."""
+    from repro.kernels.decode_attention.ops import paged_decode_attention
+    from repro.kernels.decode_attention.ref import decode_attention_ref
+
+    rng = np.random.default_rng(1)
+    B, nh, nkv, hd, ps, P, nblk = 3, 4, 2, 8, 4, 13, 4
+    q = jnp.asarray(rng.standard_normal((B, nh, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((P, ps, nkv, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((P, ps, nkv, hd)), jnp.float32)
+    bt = jnp.asarray(
+        rng.permutation(P - 1)[: B * nblk].reshape(B, nblk) + 1, jnp.int32
+    )
+    lens = jnp.asarray([1, 7, 16], jnp.int32)  # partial page / mid / full
+    got = paged_decode_attention(q, k, v, bt, lens, logit_cap=logit_cap,
+                                 backend=backend)
+    dense_k = k[bt].reshape(B, nblk * ps, nkv, hd)
+    dense_v = v[bt].reshape(B, nblk * ps, nkv, hd)
+    for b in range(B):
+        want = decode_attention_ref(
+            q[b : b + 1], dense_k[b : b + 1], dense_v[b : b + 1],
+            lens[b], logit_cap=logit_cap,
+        )
+        np.testing.assert_allclose(
+            np.asarray(got[b : b + 1]), np.asarray(want), atol=1e-5, rtol=1e-5
+        )
+
+
+def test_paged_kernel_ignores_unbacked_tail():
+    """Rows past `lengths` — including whole null-page blocks — must not
+    leak into the output: two pools differing only in masked rows agree."""
+    from repro.kernels.decode_attention.ops import paged_decode_attention
+
+    rng = np.random.default_rng(2)
+    B, nh, nkv, hd, ps, P, nblk = 2, 2, 1, 8, 4, 6, 3
+    q = jnp.asarray(rng.standard_normal((B, nh, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((P, ps, nkv, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((P, ps, nkv, hd)), jnp.float32)
+    bt = jnp.asarray([[1, 2, 0], [3, 0, 0]], jnp.int32)  # null-page tails
+    lens = jnp.asarray([6, 3], jnp.int32)
+    base = paged_decode_attention(q, k, v, bt, lens)
+    # scribble over every masked row (null page + backed tails)
+    k2 = np.asarray(k).copy()
+    v2 = np.asarray(v).copy()
+    k2[0] = 7.0
+    v2[0] = -7.0
+    k2[2, 2:] = 9.0
+    v2[3, 3:] = -9.0
+    got = paged_decode_attention(q, jnp.asarray(k2), jnp.asarray(v2), bt, lens)
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(got))
+
+
+# ---------------------------------------------------------------------------
+# operator surface: CLI, telemetry → autoscaler
+# ---------------------------------------------------------------------------
+
+
+def test_serve_cli_kv_page_size(monkeypatch, capsys):
+    from repro.launch import serve
+
+    monkeypatch.setattr(
+        sys, "argv",
+        ["serve", "--arch", "phi4-mini-3.8b", "--scheduler", "none",
+         "--rate", "50", "--duration", "0.04", "--max-batch", "2",
+         "--cache-len", "64", "--kv-page-size", "16"],
+    )
+    serve.main()
+    out = capsys.readouterr().out
+    assert "kv_pages" in out
+
+
+def test_autoscaler_kv_pressure_adds_attention_device():
+    from repro.core.scaling import EvalResult, PerfModel
+    from repro.serving.controller import AutoScaler
+
+    cfg = get_config("dsv2-lite-reduced")
+    ctrl = AutoScaler(PerfModel(cfg, slots_per_instance=3, s_ctx=64), slo=0.2,
+                      n_max=8)
+    decision = EvalResult(n_a=2, n_e=2, batch=4, tpot=0.1, t_attn=0, t_moe=0,
+                          t_comm=0, a_max=1, tpg=1.0, feasible=True)
+    ctrl.scaler.scale = lambda lam, slo: dataclasses.replace(decision)
+    ctrl.observe(0.0, 16.0, kv_occupancy=0.5)
+    assert ctrl.decide(1.0, demand=100.0).n_a == 2  # below threshold
+    ctrl.observe(2.0, 16.0, kv_occupancy=0.95)
+    assert ctrl.kv_pressure(3.0) == pytest.approx(0.95)
+    assert ctrl.decide(3.0, demand=100.0).n_a == 3  # pressure adds one
+    # pressure ages out of the window
+    assert ctrl.decide(2.0 + ctrl.window + 1.0, demand=100.0).n_a == 2
+
+
+def test_engine_metrics_feed_autoscaler_occupancy():
+    """The mono paged engine exposes `kv_pages` occupancy; feeding it through
+    observe() is what actuate() does on a live disagg engine."""
+    cfg = get_config("phi4-mini-3.8b-reduced")
+    eng = ServingEngine(cfg, model_mod.init_params(cfg, 0), max_batch=2,
+                        cache_len=64, scheduler="none", kv_page_size=PS,
+                        step_time_fn=lambda n: 2e-3)
+    eng.run(_reqs(cfg, 3), max_steps=2000)
+    stats = eng.metrics()["kv_pages"]
+    assert set(stats) >= {"page_size", "num_pages", "pages_in_use",
+                          "pages_peak", "pages_free", "occupancy",
+                          "fragmentation"}
+    assert 0.0 <= stats["occupancy"] <= 1.0
