@@ -33,6 +33,7 @@ MODULES = [
     "prefill_disagg_bench",
     "fault_recovery_bench",
     "paged_kv_bench",
+    "prefix_cache_bench",
     "roofline_report",
 ]
 

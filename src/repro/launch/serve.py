@@ -50,6 +50,28 @@ def main():
         help="page-pool size (incl. the reserved null page); default backs "
         "every slot fully — shrink it to overcommit KV memory",
     )
+    ap.add_argument(
+        "--prefix-cache", action="store_true",
+        help="page-granular radix prefix cache: prompts sharing a chunk-"
+        "aligned token prefix reuse its KV pages by block-table splicing "
+        "(zero recompute, zero copy); requires --kv-page-size",
+    )
+    ap.add_argument(
+        "--prefix-cache-pages", type=int, default=None, metavar="N",
+        help="page budget the prefix index may pin; LRU leaf eviction beyond "
+        "it (default: unbounded — pages free when the last holder drops)",
+    )
+    ap.add_argument(
+        "--prefill-batch", type=int, default=1, metavar="B",
+        help="fuse up to B pending prompts into one padded-and-masked prefill "
+        "chunk call per device (bit-identical to serial; default 1)",
+    )
+    ap.add_argument(
+        "--workload", default="chat", choices=["chat", "shared-prefix"],
+        help="request-length preset: chat (ShareGPT-like) or shared-prefix "
+        "(every prompt opens with the same system prompt — the prefix-cache "
+        "workload)",
+    )
     ap.add_argument("--ping-pong", action="store_true", help="m=2 micro-batch overlap (disagg)")
     ap.add_argument(
         "--fault-plan", default=None, metavar="PATH",
@@ -69,7 +91,7 @@ def main():
     from repro.core.placement import build_layout
     from repro.models import model as model_mod
     from repro.serving.engine import ServingEngine
-    from repro.serving.request import WorkloadSpec, sample_requests
+    from repro.serving.request import WorkloadSpec, sample_requests, shared_prefix_spec
     from repro.serving.trace import poisson_arrivals
 
     cfg = get_config(args.arch + "-reduced")
@@ -79,9 +101,12 @@ def main():
         C = args.slots or (cfg.num_experts // args.n_instances + 1)
         trace = make_routing_trace(2048, cfg.num_experts, cfg.top_k, skew=0.8, seed=args.seed)
         layout = build_layout(trace, cfg.num_experts, args.n_instances, C)
-    spec = WorkloadSpec(
-        mean_input=8, mean_output=24, vocab_size=cfg.vocab_size, max_input=48, max_output=64
-    )
+    if args.workload == "shared-prefix":
+        spec = shared_prefix_spec(vocab_size=cfg.vocab_size)
+    else:
+        spec = WorkloadSpec(
+            mean_input=8, mean_output=24, vocab_size=cfg.vocab_size, max_input=48, max_output=64
+        )
     reqs = sample_requests(spec, poisson_arrivals(args.rate, args.duration, args.seed), with_prompts=True)
     if args.request_deadline is not None:
         for r in reqs:
@@ -108,6 +133,9 @@ def main():
         fault_plan=fault_plan,
         kv_page_size=args.kv_page_size,
         kv_num_pages=args.kv_num_pages,
+        prefix_cache=args.prefix_cache,
+        prefix_cache_pages=args.prefix_cache_pages,
+        prefill_batch=args.prefill_batch,
     )
     print(
         f"serving {len(reqs)} requests on {cfg.name} "

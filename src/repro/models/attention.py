@@ -17,9 +17,28 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+import os
+
 from repro.models.common import Params, apply_rope, dense_init, softcap, split_keys
 
 NEG_INF = -2.0e38
+
+
+def paged_decode_backend() -> str:
+    """Which read path serves paged decode attention: the paged Pallas flash
+    kernel (``"kernel"``) or the jnp gather + dense softmax (``"gather"``).
+
+    ``REPRO_PAGED_DECODE`` overrides (``kernel``/``gather``); the ``auto``
+    default picks the kernel on TPU — where streaming pages HBM→VMEM with
+    online softmax beats materialising the gathered ``[b, S, ...]`` view —
+    and the gather path elsewhere (interpreted Pallas is debug-speed).
+    Token streams match either way (flash and dense softmax agree to float
+    tolerance; greedy argmax sees identical winners), and the int8-quantised
+    pool always takes the gather path (the paged kernel is bf16/f32-only)."""
+    mode = os.environ.get("REPRO_PAGED_DECODE", "auto")
+    if mode in ("kernel", "gather"):
+        return mode
+    return "kernel" if jax.default_backend() == "tpu" else "gather"
 
 
 def init_attention(cfg, key, dtype=jnp.bfloat16) -> Params:
@@ -157,11 +176,12 @@ def attention_prefill_chunk(
     x: jax.Array,  # [b, c, d] — one prompt chunk
     cache_k: jax.Array,  # [b, S, nkv, hd] bf16 (or int8 when cfg.kv_quant)
     cache_v: jax.Array,
-    start: jax.Array,  # scalar int32 — absolute position of the chunk's first token
+    start: jax.Array,  # scalar int32 (or [b] — one chunk position per row)
     cfg,
     window: Optional[int] = None,
     k_scale: Optional[jax.Array] = None,  # [b, S, nkv] (int8 caches only)
     v_scale: Optional[jax.Array] = None,
+    lengths: Optional[jax.Array] = None,  # [b] valid tokens per row (vector start)
 ):
     """Chunked prefill: attend a c-token prompt chunk against the cache.
 
@@ -186,6 +206,14 @@ def attention_prefill_chunk(
     determinism, which :func:`attention_decode` then matches by reading the
     same int8 cache.
 
+    Batched multi-prompt prefill passes a *vector* ``start`` (``[b]``) plus
+    ``lengths`` (``[b]``): each row carries its own chunk at its own absolute
+    positions, rows are zero-padded to a common width, padded query rows are
+    fully masked (their softmax degenerates to a uniform, finite
+    distribution over masked scores — garbage out, never NaN) and padded
+    cache writes are dropped, so every valid row computes exactly what the
+    scalar path would.  Vector start requires the non-window path.
+
     Returns ``(out, new_cache_k, new_cache_v)`` — plus
     ``(new_k_scale, new_v_scale)`` when the cache is quantised.
     """
@@ -193,7 +221,13 @@ def attention_prefill_chunk(
     b, c, _ = x.shape
     S = cache_k.shape[1]
     nkv = cfg.num_kv_heads
-    pos = start + jnp.arange(c)  # [c] absolute positions
+    vec = jnp.ndim(start) == 1  # batched multi-prompt path
+    if vec and window is not None:
+        raise ValueError("vector-start chunks require full-context layers")
+    if vec and lengths is None:
+        raise ValueError("vector-start chunks require per-row lengths")
+    # [c] absolute positions (scalar start) or [b, c] (vector start)
+    pos = start[:, None] + jnp.arange(c)[None, :] if vec else start + jnp.arange(c)
     q = jnp.einsum("bsd,dnh->bsnh", x, params["wq"])
     k = jnp.einsum("bsd,dnh->bsnh", x, params["wk"])
     v = jnp.einsum("bsd,dnh->bsnh", x, params["wv"])
@@ -245,6 +279,26 @@ def attention_prefill_chunk(
         else:
             cache_k = cache_k.at[:, slots].set(k.astype(cache_k.dtype))
             cache_v = cache_v.at[:, slots].set(v.astype(cache_v.dtype))
+    elif vec:
+        # per-row chunk writes: row b lands at [start[b], start[b]+len[b]);
+        # padding columns redirect to an out-of-bounds row and are dropped
+        valid = jnp.arange(c)[None, :] < lengths[:, None]  # [b, c]
+        row = jnp.where(valid, pos, S)
+        bidx = jnp.arange(b)[:, None]
+        if quant:
+            cache_k = cache_k.at[bidx, row].set(k_q, mode="drop")
+            cache_v = cache_v.at[bidx, row].set(v_q, mode="drop")
+            k_scale = k_scale.at[bidx, row].set(ks_q, mode="drop")
+            v_scale = v_scale.at[bidx, row].set(vs_q, mode="drop")
+            k_att = dequantize_kv(cache_k, k_scale, x.dtype)
+            v_att = dequantize_kv(cache_v, v_scale, x.dtype)
+        else:
+            cache_k = cache_k.at[bidx, row].set(k.astype(cache_k.dtype), mode="drop")
+            cache_v = cache_v.at[bidx, row].set(v.astype(cache_v.dtype), mode="drop")
+            k_att, v_att = cache_k, cache_v
+        # [b, c, S]: causal per row, padded query rows fully masked
+        mask = (idx[None, None, :] <= pos[:, :, None]) & valid[:, :, None]
+        out = _attend(qg, k_att, v_att, mask[:, None, None], cfg.attn_logit_softcap)
     else:
         if quant:
             cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k_q, start, axis=1)
@@ -359,21 +413,31 @@ def attention_decode(
     idx = jnp.arange(S)
     mask = idx[None, :] <= pos  # [b, S] (rolling buffers are full once wrapped)
     qg = _group_q(q, nkv)
-    if paged:
-        def gather(pool):
-            return pool[block_tables].reshape(b, S, *pool.shape[2:])
+    if paged and not quant and paged_decode_backend() == "kernel":
+        # page-indirect flash decode: scalar-prefetched block tables stream
+        # each slot's pages HBM→VMEM, never materialising the gathered view
+        from repro.kernels.decode_attention.ops import paged_decode_attention
 
-        if quant:
-            k_r = dequantize_kv(gather(cache_k), gather(k_scale), x.dtype)
-            v_r = dequantize_kv(gather(cache_v), gather(v_scale), x.dtype)
-        else:
-            k_r, v_r = gather(cache_k), gather(cache_v)
-    elif quant:
-        k_r = dequantize_kv(cache_k, k_scale, x.dtype)
-        v_r = dequantize_kv(cache_v, v_scale, x.dtype)
+        out = paged_decode_attention(
+            q[:, 0], cache_k, cache_v, block_tables, pos[:, 0] + 1,
+            logit_cap=float(cfg.attn_logit_softcap or 0.0),
+        )[:, None]  # [b, 1, nh, hd]
     else:
-        k_r, v_r = cache_k, cache_v
-    out = _attend(qg, k_r, v_r, mask[:, None, None, None, :], cfg.attn_logit_softcap)
+        if paged:
+            def gather(pool):
+                return pool[block_tables].reshape(b, S, *pool.shape[2:])
+
+            if quant:
+                k_r = dequantize_kv(gather(cache_k), gather(k_scale), x.dtype)
+                v_r = dequantize_kv(gather(cache_v), gather(v_scale), x.dtype)
+            else:
+                k_r, v_r = gather(cache_k), gather(cache_v)
+        elif quant:
+            k_r = dequantize_kv(cache_k, k_scale, x.dtype)
+            v_r = dequantize_kv(cache_v, v_scale, x.dtype)
+        else:
+            k_r, v_r = cache_k, cache_v
+        out = _attend(qg, k_r, v_r, mask[:, None, None, None, :], cfg.attn_logit_softcap)
     y = jnp.einsum("bsnh,nhd->bsd", out, params["wo"])
     if quant:
         return y, cache_k, cache_v, k_scale, v_scale

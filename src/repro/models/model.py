@@ -81,8 +81,18 @@ def prefill_chunk(params, tokens, caches, start, cfg, extra=None):
     return transformer.prefill_chunk(params, tokens, caches, start, cfg, extra=extra)
 
 
+def prefill_chunk_batched(params, tokens, caches, starts, lengths, cfg, extra=None):
+    return transformer.prefill_chunk_batched(
+        params, tokens, caches, starts, lengths, cfg, extra=extra
+    )
+
+
 def supports_chunked_prefill(cfg) -> bool:
     return transformer.supports_chunked_prefill(cfg)
+
+
+def supports_batched_prefill(cfg) -> bool:
+    return transformer.supports_batched_prefill(cfg)
 
 
 def decode_step(params, tokens, caches, cache_index, cfg, extra=None, unroll=False):

@@ -227,7 +227,7 @@ def attention_stage_full(lp, x, cfg, positions, window=None, enc_out=None, retur
     return x, h2, kv
 
 
-def attention_stage_chunk(lp, x, kv, start, cfg, window=None):
+def attention_stage_chunk(lp, x, kv, start, cfg, window=None, lengths=None):
     """Chunked-prefill analogue of :func:`attention_stage`: ln1 → chunk
     attention against the cache (writes the chunk's KV at absolute positions
     ``[start, start+c)``) → residual → ln2.
@@ -237,17 +237,21 @@ def attention_stage_chunk(lp, x, kv, start, cfg, window=None):
     executors compose their halves.  Quantised (``cfg.kv_quant``) caches
     carry ``k_scale``/``v_scale`` through the same dict; the chunk is
     quantised once at its boundary (see :func:`attention_prefill_chunk`).
+
+    Batched multi-prompt prefill passes vector ``start`` (``[b]``) and
+    ``lengths`` (``[b]`` valid tokens per row, the rest padding).
     """
     h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
     if cfg.kv_quant:
         h, ck, cv, ks, vs = attn_mod.attention_prefill_chunk(
             lp["attn"], h, kv["k"], kv["v"], start, cfg, window=window,
-            k_scale=kv["k_scale"], v_scale=kv["v_scale"],
+            k_scale=kv["k_scale"], v_scale=kv["v_scale"], lengths=lengths,
         )
         new_kv = {"k": ck, "v": cv, "k_scale": ks, "v_scale": vs}
     else:
         h, ck, cv = attn_mod.attention_prefill_chunk(
-            lp["attn"], h, kv["k"], kv["v"], start, cfg, window=window
+            lp["attn"], h, kv["k"], kv["v"], start, cfg, window=window,
+            lengths=lengths,
         )
         new_kv = {"k": ck, "v": cv}
     x = x + h
@@ -676,4 +680,85 @@ def prefill_chunk(
     x, new_caches = jax.lax.scan(lambda x, sc: body(x, dict(sc)), x, scanned_in)
     out_caches = {k: v.reshape(caches[k].shape) for k, v in new_caches.items()}
     logits = lm_head(params, x[:, -1, :], cfg)
+    return logits, out_caches
+
+
+def supports_batched_prefill(cfg) -> bool:
+    """Batched multi-prompt chunked prefill (and the prefix cache, which
+    shares its uniform chunk-grid requirement) covers dense/moe stacks with
+    full-context attention only.  Rolling-window (``dense_local``) layers
+    store position ``p`` at row ``p % window`` — rows from different
+    per-request histories cannot share one padded write grid, and a prefix
+    hit could not seed the wrapped window rows exactly."""
+    if not supports_chunked_prefill(cfg):
+        return False
+    period, _ = period_pattern(cfg)
+    return all(k in ("dense", "moe") for k in period)
+
+
+def prefill_chunk_batched(
+    params: Params,
+    tokens: jax.Array,  # [b, c_max] — one chunk per prompt, zero-padded
+    caches: Dict[str, jax.Array],  # decode-format caches, batch axis = b
+    starts: jax.Array,  # [b] int32 — absolute position of each row's chunk
+    lengths: jax.Array,  # [b] int32 — valid tokens per row (≤ c_max)
+    cfg,
+    extra: Optional[Dict[str, Any]] = None,
+):
+    """Multi-prompt :func:`prefill_chunk`: row ``b`` processes ``lengths[b]``
+    prompt tokens starting at absolute position ``starts[b]``; rows are
+    padded to a common width and masked, so several pending prompts share
+    one kernel launch.  Rows are computed independently — padding adds query
+    rows, never keys (padded cache writes are dropped), so each valid row is
+    bit-identical to the serial :func:`prefill_chunk` path.
+
+    Returns ``(per-row last-valid-position logits [b, vocab], new caches)``.
+    """
+    if not supports_batched_prefill(cfg):
+        raise ValueError(f"{cfg.name}: architecture does not support batched prefill")
+    period, n_periods = period_pattern(cfg)
+    x = embed_tokens(params, tokens, cfg, extra)
+    moe_ctx = (extra or {}).get("moe_ctx")
+
+    def regroup(name):
+        a = caches[name]
+        return a.reshape(n_periods, a.shape[0] // n_periods, *a.shape[1:])
+
+    scan_caches = {k: regroup(k) for k in caches if k not in ("enc_out",)}
+
+    def body(x, scanned):
+        counters = {"full": 0}
+
+        def kv_slice(i):
+            kv = {"k": scanned["kv_k"][i], "v": scanned["kv_v"][i]}
+            if cfg.kv_quant:
+                kv["k_scale"] = scanned["kv_k_scale"][i]
+                kv["v_scale"] = scanned["kv_v_scale"][i]
+            return kv
+
+        def kv_write(i, new_kv):
+            scanned["kv_k"] = scanned["kv_k"].at[i].set(new_kv["k"])
+            scanned["kv_v"] = scanned["kv_v"].at[i].set(new_kv["v"])
+            if cfg.kv_quant:
+                scanned["kv_k_scale"] = scanned["kv_k_scale"].at[i].set(new_kv["k_scale"])
+                scanned["kv_v_scale"] = scanned["kv_v_scale"].at[i].set(new_kv["v_scale"])
+
+        for pos, kind in enumerate(period):
+            lp = scanned["blocks"][f"pos{pos}"]
+            i = counters["full"]
+            counters["full"] += 1
+            x, h2, new_kv = attention_stage_chunk(
+                lp, x, kv_slice(i), starts, cfg, lengths=lengths
+            )
+            kv_write(i, new_kv)
+            x = moe_stage(lp, x, h2, cfg, moe_ctx if kind == "moe" else None)
+        return x, {k: scanned[k] for k in scan_caches}
+
+    scanned_in = dict(scan_caches)
+    scanned_in["blocks"] = params["blocks"]
+    x, new_caches = jax.lax.scan(lambda x, sc: body(x, dict(sc)), x, scanned_in)
+    out_caches = {k: v.reshape(caches[k].shape) for k, v in new_caches.items()}
+    last = jnp.maximum(lengths - 1, 0)
+    x_last = x[jnp.arange(x.shape[0]), last]  # [b, d] — each row's own tail
+    logits = lm_head(params, x_last, cfg)
     return logits, out_caches

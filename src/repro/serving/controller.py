@@ -62,6 +62,10 @@ class AutoScaler:
         self._tokens: List[float] = []
         self._input_tokens: List[float] = []
         self._kv_obs: List[tuple] = []  # (t, paged-pool occupancy) samples
+        # fraction of recent prompt tokens the prefix cache served from shared
+        # pages (engine metrics()["prefix_cache"]["saved_frac"], sampled by
+        # actuate) — those tokens never reach the prefill pool
+        self._prefix_saved_frac = 0.0
         self.current: Optional[EvalResult] = None
         self.events: List[ScalingEvent] = []
         self.device_losses: List[tuple] = []  # (t, pool) permanent losses seen
@@ -91,13 +95,18 @@ class AutoScaler:
         tokens: float,
         input_tokens: float = 0.0,
         kv_occupancy: float = 0.0,
+        saved_input_tokens: float = 0.0,
     ) -> None:
         """Log one arrival: ``tokens`` drives decode scaling, ``input_tokens``
         (the prompt length) drives prefill-pool scaling, ``kv_occupancy``
-        (paged-KV pool fill fraction, 0..1) drives memory-pressure scaling."""
+        (paged-KV pool fill fraction, 0..1) drives memory-pressure scaling.
+        ``saved_input_tokens`` (prompt tokens a prefix-cache hit served from
+        shared pages) are subtracted — they cost the prefill pool nothing.
+        Callers without per-request hit information can leave it 0 and let
+        :meth:`actuate`'s sampled ``saved_frac`` discount demand instead."""
         self._arrivals.append(t)
         self._tokens.append(tokens)
-        self._input_tokens.append(input_tokens)
+        self._input_tokens.append(max(0.0, input_tokens - saved_input_tokens))
         if kv_occupancy > 0.0:
             self._kv_obs.append((t, float(kv_occupancy)))
 
@@ -126,6 +135,10 @@ class AutoScaler:
         if self.prefill_tok_rate <= 0:
             return None
         lam_in = demand if demand is not None else self.prefill_demand(now)
+        # prefix-cache discount: the fraction of prompt tokens served from
+        # shared pages never reaches the prefill devices, so a warm cache
+        # shrinks the pool the same demand would otherwise require
+        lam_in *= max(0.0, 1.0 - self._prefix_saved_frac)
         if lam_in <= 0:
             return 1  # keep one warm replica — admission stays pipelined
         n_p = int(np.ceil(lam_in / self.prefill_tok_rate))
@@ -177,9 +190,13 @@ class AutoScaler:
                 "actuate requires ServingEngine(executor='disagg'); "
                 "use decide() for advisory-only scaling"
             )
-        pages = engine.metrics().get("kv_pages")
+        m = engine.metrics()
+        pages = m.get("kv_pages")
         if pages is not None:
             self._kv_obs.append((now, float(pages.get("occupancy", 0.0))))
+        prefix = m.get("prefix_cache")
+        if prefix is not None:
+            self._prefix_saved_frac = float(prefix.get("saved_frac", 0.0))
         best = self.decide(now)
         # prefill devices only pay off under pipelined admission — a blocking
         # engine would keep stalling the decode clock no matter the pool size

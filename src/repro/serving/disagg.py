@@ -52,7 +52,7 @@ from repro.models import model as model_mod
 from repro.models import moe as moe_mod
 from repro.models import transformer
 from repro.models.ffn import ffn
-from repro.serving.kv_cache import PagedKVCache
+from repro.serving.kv_cache import PagedKVCache, PrefixIndex
 
 _KV_KEYS = {"k": "kv_k", "v": "kv_v", "k_scale": "kv_k_scale", "v_scale": "kv_v_scale"}
 
@@ -99,6 +99,9 @@ class DisaggExecutor:
         devices: Optional[Sequence[jax.Device]] = None,
         kv_page_size: Optional[int] = None,
         kv_num_pages: Optional[int] = None,
+        prefix_cache: bool = False,
+        prefix_cache_pages: Optional[int] = None,
+        prefix_chunk: int = 64,
     ):
         if not cfg.has_moe:
             raise ValueError("disagg executor requires an MoE architecture")
@@ -129,6 +132,16 @@ class DisaggExecutor:
         self.kv_num_pages = kv_num_pages
         # per-shard page managers (local-row block tables); None = contiguous
         self._pagers: Optional[List[PagedKVCache]] = None
+        # prefix cache: one radix index per attention shard (a slot can only
+        # share pages with slots on its own shard — page ids are pool-local)
+        self.prefix_cache = bool(prefix_cache) and kv_page_size is not None
+        self.prefix_cache_pages = prefix_cache_pages
+        self.prefix_chunk = max(1, int(prefix_chunk))
+        self._indexes: Optional[List[PrefixIndex]] = None
+        self._prefix_carry = {
+            "hits": 0, "misses": 0, "saved_tokens": 0,
+            "lookup_tokens": 0, "evicted_pages": 0,
+        }
         # per-slot live KV length — executor-level so it survives re-sharding
         # (reconfigure / drop_attn_device rebuild block tables from it)
         self._slot_len = np.zeros(max_batch, np.int64)
@@ -301,6 +314,33 @@ class DisaggExecutor:
                         }
                     )
                 self._kv.append(per_layer)
+
+        # prefix indexes are shard-local: a re-shard re-assigns page ids, so
+        # sharing dissolves and the indexes restart empty (correct — exported
+        # rows were gathered through the shared pages before the rebuild).
+        # Cumulative hit/miss telemetry carries over.
+        old_indexes = getattr(self, "_indexes", None)
+        if old_indexes:
+            carry = self._prefix_carry
+            for ix in old_indexes:
+                carry["hits"] += ix.hits
+                carry["misses"] += ix.misses
+                carry["saved_tokens"] += ix.saved_tokens
+                carry["lookup_tokens"] += ix.lookup_tokens
+                carry["evicted_pages"] += ix.evicted_pages
+        self._indexes = None
+        if self.prefix_cache and self._pagers is not None:
+            self._indexes = []
+            for s, pager in zip(self.shards, self._pagers):
+                budget = None
+                if self.prefix_cache_pages is not None:
+                    # split the operator's pin budget proportionally to rows
+                    budget = max(
+                        1, round(self.prefix_cache_pages * s.rows / self.max_batch)
+                    )
+                self._indexes.append(
+                    PrefixIndex(self.prefix_chunk, pager, max_pages=budget)
+                )
 
         # exchange schedule (regime chosen per step; both plans precomputed)
         self._plans = {r: plan_exchange(self.pools, r) for r in ("case1", "case2")}
@@ -534,6 +574,83 @@ class DisaggExecutor:
             return
         si = self._shard_of(slot)
         self._pagers[si].release(slot - self.shards[si].lo)
+
+    # ------------------------------------------------------------------
+    # prefix cache (shard-local radix reuse)
+    # ------------------------------------------------------------------
+    def splice_prefix(self, slot: int, tokens: np.ndarray, limit: int):
+        """Serve the longest cached prefix of ``tokens`` from ``slot``'s own
+        shard: splice the shared pages into the local block table (per-layer
+        copy-on-write for a trailing partial page) and gather the matched KV
+        rows into worker-seed format (``kv name → [L, match, ...]``).
+        Returns ``(match, seed_caches)`` — ``(0, None)`` on a miss."""
+        if self._indexes is None:
+            return 0, None
+        si = self._shard_of(slot)
+        local = slot - self.shards[si].lo
+        match, pages = self._indexes[si].lookup(tokens, limit)
+        if not match:
+            return 0, None
+        pager = self._pagers[si]
+        cow = pager.splice(local, pages, match)
+        if cow is not None:
+            src, dst, rows = cow
+            for layer_kv in self._kv[si]:
+                for short in _KV_KEYS:
+                    if short in layer_kv:
+                        layer_kv[short] = layer_kv[short].at[dst, :rows].set(
+                            layer_kv[short][src, :rows]
+                        )
+        # the spliced rows are live KV: a re-shard/fault rebuild must carry
+        # them (export gathers through the shared pages, re-pagination gives
+        # the slot exclusive copies — streams stay bit-identical)
+        self._slot_len[slot] = max(int(self._slot_len[slot]), match)
+        pgs, offs = pager.rows_of(local, 0, match)
+        seed: Dict[str, np.ndarray] = {}
+        for short, name in _KV_KEYS.items():
+            if short not in self._kv[si][0]:
+                continue
+            seed[name] = np.stack(
+                [np.asarray(layer_kv[short])[pgs, offs] for layer_kv in self._kv[si]]
+            )
+        return match, seed
+
+    def publish_prefix(self, slot: int, tokens: np.ndarray, upto: int) -> None:
+        """Index the chunk-aligned prefix KV ``slot`` just prefilled (pins
+        the backing pages on its shard's index)."""
+        if self._indexes is None:
+            return
+        si = self._shard_of(slot)
+        self._indexes[si].publish(tokens, upto, slot - self.shards[si].lo)
+
+    def prefix_stats(self) -> Optional[Dict[str, float]]:
+        """Aggregated prefix-cache telemetry across the attention shards
+        (plus counters carried over from pre-re-shard indexes)."""
+        if self._indexes is None:
+            return None
+        c = dict(self._prefix_carry)
+        shared = nodes = 0
+        for ix in self._indexes:
+            c["hits"] += ix.hits
+            c["misses"] += ix.misses
+            c["saved_tokens"] += ix.saved_tokens
+            c["lookup_tokens"] += ix.lookup_tokens
+            c["evicted_pages"] += ix.evicted_pages
+            shared += ix.held_pages
+            nodes += len(ix._nodes)
+        total = c["hits"] + c["misses"]
+        return {
+            "hits": c["hits"],
+            "misses": c["misses"],
+            "hit_rate": c["hits"] / total if total else 0.0,
+            "saved_tokens": c["saved_tokens"],
+            "saved_frac": (
+                c["saved_tokens"] / c["lookup_tokens"] if c["lookup_tokens"] else 0.0
+            ),
+            "shared_pages": shared,
+            "evicted_pages": c["evicted_pages"],
+            "nodes": nodes,
+        }
 
     def _sync_tables(self) -> None:
         """Push dirty block tables into every layer's kv dict before decode."""

@@ -71,8 +71,10 @@ from repro.serving.faults import (
 )
 from repro.serving.kv_cache import (
     ACTIVE,
+    PAGED_KEYS,
     PREFILLING,
     PagedKVCache,
+    PrefixIndex,
     SlotManager,
     make_paged_caches,
     paginate_caches,
@@ -123,6 +125,9 @@ class ServingEngine:
         max_prefill_queue: Optional[int] = None,  # admission backpressure bound
         kv_page_size: Optional[int] = None,  # page the "" KV caches (None = contiguous)
         kv_num_pages: Optional[int] = None,  # pool size (default: full backing + null)
+        prefix_cache: bool = False,  # page-granular radix prefix reuse (needs paging)
+        prefix_cache_pages: Optional[int] = None,  # index pin budget (None = unbounded)
+        prefill_batch: int = 1,  # prompts fused per prefill-device chunk call
     ):
         self.cfg = cfg
         self.params = params
@@ -153,6 +158,26 @@ class ServingEngine:
         self.kv_page_size = kv_page_size
         self.kv_num_pages = kv_num_pages
         self.paged: Optional[PagedKVCache] = None  # mono-executor page manager
+        self.prefix_cache = bool(prefix_cache)
+        self.prefix_cache_pages = prefix_cache_pages
+        self.prefix: Optional[PrefixIndex] = None  # mono-executor radix index
+        if self.prefix_cache:
+            if kv_page_size is None:
+                raise ValueError(
+                    "prefix_cache requires paged KV storage (set kv_page_size) "
+                    "— a hit is served by block-table page sharing"
+                )
+            if not model_mod.supports_batched_prefill(cfg):
+                raise ValueError(
+                    "prefix_cache requires an architecture whose decode caches "
+                    "are all full-attention (dense/moe periods) — rolling-"
+                    "window / recurrent state cannot be seeded positionally"
+                )
+        # effective worker chunk (mirrors PrefillWorker's sliding-window
+        # clamp) — the prefix index's chunk grid must match it exactly
+        eff_chunk = max(1, int(prefill_chunk))
+        if getattr(cfg, "sliding_window", None):
+            eff_chunk = min(eff_chunk, min(cache_len, cfg.sliding_window))
         self.faults: Optional[FaultRuntime] = None
         self.degraded_reason: Optional[str] = None
         # subscribers notified on permanent device loss: fn(fault, clock).
@@ -189,6 +214,9 @@ class ServingEngine:
                 scheduler=SCHEDULERS[scheduler], capacity=capacity_tokens,
                 ping_pong=ping_pong,
                 kv_page_size=kv_page_size, kv_num_pages=kv_num_pages,
+                prefix_cache=self.prefix_cache,
+                prefix_cache_pages=prefix_cache_pages,
+                prefix_chunk=eff_chunk,
             )
             self.caches = None  # cache residency moves to the executor's pool
         elif executor == "mono":
@@ -253,7 +281,13 @@ class ServingEngine:
             cfg, params, prefill_devices,
             cache_len=cache_len, chunk=prefill_chunk,
             extra=worker_extra, prefill_time_fn=worker_time_fn,
+            batch=prefill_batch,
         )
+        if self.prefix_cache and self.paged is not None:
+            self.prefix = PrefixIndex(
+                self.prefill_worker.chunk, self.paged,
+                max_pages=prefix_cache_pages,
+            )
 
         if fault_plan is not None:
             self.arm_faults(fault_plan, policy=retry_policy, watchdog=watchdog)
@@ -382,7 +416,14 @@ class ServingEngine:
             self.slots.fail(slot)
             self.slots.requeue(slot)
             self.slots.start_prefill(slot)
-            worker.submit(req, slot, now=max(self.clock, req.arrival))
+            # drop the slot's pages — including any prefix-cache pins — and
+            # re-splice fresh: the restart must not leak reservations
+            self._release_pages(slot)
+            start, seed = self._prefix_splice(req, slot)
+            worker.submit(
+                req, slot, now=max(self.clock, req.arrival),
+                start=start, seed_caches=seed,
+            )
             self.faults.stats.requeued += 1
 
     def _rebuild_lost_slots(self, lost_rows: List[int]) -> None:
@@ -411,7 +452,12 @@ class ServingEngine:
                 self.slots.fail(slot)
                 self.slots.requeue(slot)
                 self.slots.start_prefill(slot)
-                self.prefill_worker.submit(req, slot, now=max(self.clock, req.arrival))
+                self._release_pages(slot)
+                start, seed = self._prefix_splice(req, slot)
+                self.prefill_worker.submit(
+                    req, slot, now=max(self.clock, req.arrival),
+                    start=start, seed_caches=seed,
+                )
                 stats.requeued += 1
 
     def _replay_slot(self, slot: int) -> None:
@@ -422,12 +468,8 @@ class ServingEngine:
         the machinery that originally wrote it, and every replayed token is
         checked against the recorded stream."""
         req = self.slots.slot_req[slot]
-        prompt = req.prompt
-        if prompt is None:
-            rng = np.random.default_rng(req.rid)
-            prompt = rng.integers(0, self.cfg.vocab_size, size=req.input_len, dtype=np.int32)
         first = self.prefill_worker.run_sync(
-            np.asarray(prompt, np.int32), slot, self._chunk_sink
+            self._prompt_tokens(req), slot, self._chunk_sink
         )
         if req.tokens_out and first != req.tokens_out[0]:
             raise RuntimeError(
@@ -478,6 +520,13 @@ class ServingEngine:
             self.paged, caches = paginate_caches(
                 caches, lengths, self.kv_page_size, self.kv_num_pages
             )
+            if self.prefix_cache:
+                # sharing dissolved with the shard pagers; restart a fresh
+                # mono index over the re-paginated pool
+                self.prefix = PrefixIndex(
+                    self.prefill_worker.chunk, self.paged,
+                    max_pages=self.prefix_cache_pages,
+                )
         self.caches = jax.device_put(caches, jax.devices()[0])
         self.disagg = None
         self.executor_name = "mono"
@@ -558,11 +607,95 @@ class ServingEngine:
         req.finished = self.clock
         self.rejected.append(req)
 
+    def cancel_slot(self, slot: int) -> Optional[Request]:
+        """Withdraw a reserved/prefilling request before activation: pull it
+        from the prefill worker (or its finished-but-unactivated event),
+        release the slot's pages — dropping any prefix-cache pins — and free
+        the slot.  Returns the withdrawn request, or None if the slot holds
+        nothing cancellable (free or already active)."""
+        req = self.prefill_worker.cancel_slot(slot)
+        if req is None:
+            for ev in self._ready:
+                if ev.slot == slot:
+                    req = ev.req
+            self._ready = [ev for ev in self._ready if ev.slot != slot]
+        if req is None:
+            held = self.slots.slot_req[slot]
+            if held is not None and self.slots.state[slot] != ACTIVE:
+                req = held
+        if req is None:
+            return None
+        self._release_pages(slot)
+        self.slots.release(slot)
+        return req
+
     def _admission_open(self) -> bool:
         """Backpressure: stop admitting when the prefill queue is saturated."""
         if self.max_prefill_queue is None:
             return True
         return self.prefill_worker.num_pending < self.max_prefill_queue
+
+    # ------------------------------------------------------------------
+    # prefix cache (page-granular radix reuse)
+    # ------------------------------------------------------------------
+    def _prompt_tokens(self, req: Request) -> np.ndarray:
+        """The request's prompt tokens, materialising the seeded synthetic
+        prompt when none was given (same rng contract as the worker)."""
+        if req.prompt is not None:
+            return np.asarray(req.prompt, np.int32)
+        rng = np.random.default_rng(req.rid)
+        return rng.integers(0, self.cfg.vocab_size, size=req.input_len, dtype=np.int32)
+
+    def _prefix_splice(self, req: Request, slot: int):
+        """Serve the longest cached prefix of ``req``'s prompt into the
+        freshly reserved ``slot``: shared pages are spliced into its block
+        table (copy-on-write for a trailing partial page) and the matched KV
+        rows are gathered for worker seeding.  Returns ``(start,
+        seed_caches)`` for :meth:`PrefillWorker.submit` — ``(0, None)`` when
+        the cache is off or misses.  The match is capped at the largest chunk
+        boundary strictly below the prompt length so at least one token
+        always prefills (activation needs first-token logits)."""
+        if not self.prefix_cache:
+            return 0, None
+        tokens = self._prompt_tokens(req)
+        chunk = self.prefill_worker.chunk
+        limit = ((len(tokens) - 1) // chunk) * chunk
+        if limit <= 0:
+            return 0, None
+        if self.disagg is not None:
+            return self.disagg.splice_prefix(slot, tokens, limit)
+        match, pages = self.prefix.lookup(tokens, limit)
+        if not match:
+            return 0, None
+        cow = self.paged.splice(slot, pages, match)
+        caches = dict(self.caches)
+        if cow is not None:
+            src, dst, rows = cow
+            for k in PAGED_KEYS:
+                if k in caches:
+                    caches[k] = caches[k].at[:, dst, :rows].set(
+                        caches[k][:, src, :rows]
+                    )
+        pgs, offs = self.paged.rows_of(slot, 0, match)
+        seed = {k: caches[k][:, pgs, offs] for k in PAGED_KEYS if k in caches}
+        caches["block_tables"] = self.paged.table_device()
+        self.caches = caches
+        return match, seed
+
+    def _prefix_publish(self, req: Request, slot: int) -> None:
+        """Index the chunk-aligned span of the prompt ``slot`` just finished
+        prefilling (called at activation, when every row is written)."""
+        if not self.prefix_cache:
+            return
+        tokens = self._prompt_tokens(req)
+        chunk = self.prefill_worker.chunk
+        upto = (len(tokens) // chunk) * chunk
+        if upto <= 0:
+            return
+        if self.disagg is not None:
+            self.disagg.publish_prefix(slot, tokens, upto)
+        else:
+            self.prefix.publish(tokens, upto, slot)
 
     # ------------------------------------------------------------------
     # admission
@@ -575,7 +708,8 @@ class ServingEngine:
         slot = self.slots.reserve(req)
         self.slots.start_prefill(slot)
         now = max(self.clock, req.arrival)
-        self.prefill_worker.submit(req, slot, now=now)
+        start, seed = self._prefix_splice(req, slot)
+        self.prefill_worker.submit(req, slot, now=now, start=start, seed_caches=seed)
         events: List[PrefillEvent] = []
         while not events:
             events = self._worker_poll()
@@ -592,13 +726,18 @@ class ServingEngine:
         req.prefill_done = self.clock
         req.token_times.append(self.clock)
         req.tokens_out = [ev.first_token]
+        self._prefix_publish(req, slot)
 
     def _submit_request(self, req: Request) -> None:
         """Pipelined admission: reserve the slot, queue the prompt for the
         prefill pool — the decode clock is never charged."""
         slot = self.slots.reserve(req)
         self.slots.start_prefill(slot)
-        self.prefill_worker.submit(req, slot, now=max(self.clock, req.arrival))
+        start, seed = self._prefix_splice(req, slot)
+        self.prefill_worker.submit(
+            req, slot, now=max(self.clock, req.arrival),
+            start=start, seed_caches=seed,
+        )
 
     def _chunk_sink(self, slot: int, start: int, length: int, one_caches: Dict) -> None:
         """Land one streamed prefill chunk (or a whole-prompt fallback cache,
@@ -673,6 +812,7 @@ class ServingEngine:
                 ev.req.prefill_done = ev.finish_t
                 ev.req.token_times.append(ev.finish_t)
                 ev.req.tokens_out = [ev.first_token]
+                self._prefix_publish(ev.req, ev.slot)
             else:
                 still.append(ev)
         self._ready = still
@@ -734,6 +874,18 @@ class ServingEngine:
                     else:
                         still_waiting.append(r)
                 waiting = still_waiting
+            # a reserved/prefilling request whose deadline lapsed mid-queue is
+            # cancelled: its slot and pages (including prefix pins) return to
+            # the pool instead of finishing a prompt nobody will wait for
+            for slot in self.slots.pending_slots:
+                req = self.slots.slot_req[slot]
+                if (
+                    req is not None
+                    and req.deadline is not None
+                    and self.clock > req.deadline
+                ):
+                    if self.cancel_slot(slot) is not None:
+                        self._reject(req)
             # admit arrived requests into free slots
             while (
                 waiting
@@ -802,6 +954,12 @@ class ServingEngine:
             page_stats = self.disagg.page_stats()
             if page_stats is not None:
                 out["kv_pages"] = page_stats
+        if self.prefix is not None:
+            out["prefix_cache"] = self.prefix.stats()
+        elif self.disagg is not None:
+            prefix_stats = self.disagg.prefix_stats()
+            if prefix_stats is not None:
+                out["prefix_cache"] = prefix_stats
         if self.faults is not None:
             out["faults"] = self.faults.stats.as_dict()
             if self.degraded_reason is not None:

@@ -53,12 +53,28 @@ block tables and the slot lifecycle (``ensure``/``release``), plus the
 dense↔paged conversion used by reconfigure/degrade migration.  Rolling-
 window (``_local``), hybrid and recurrent caches stay contiguous — their
 buffers are already bounded by the window/state size.
+
+Prefix cache (page-granular radix reuse)
+----------------------------------------
+
+Pages are refcounted, so a page can back several block tables at once:
+:class:`PrefixIndex` is a radix/trie over chunk-aligned hashes of prompt
+token prefixes whose nodes pin (refcount) the pages holding that chunk's
+KV rows.  Serving a hit is pure block-table surgery —
+:meth:`PagedKVCache.splice` maps the matched positions of a fresh slot
+onto the shared pages (copy-on-write for a trailing partial page), so a
+warm prefix costs zero recompute and zero KV copy.  Because one block
+table serves every layer of the pool arrays (`[L, num_pages, ...]`), a
+page run shares all layers' rows at once.  Shared pages return to the
+free list only when the last holder (slot *or* index node) drops them;
+eviction is LRU over unpinned leaf nodes under a page budget.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+import hashlib
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -261,9 +277,13 @@ NULL_PAGE = 0  # reserved: unallocated block-table entries point here
 
 
 class PageAllocator:
-    """Free-list allocator over pages ``1 .. num_pages-1`` (page 0 is the
-    reserved null page).  Tracks in-use and peak counts for telemetry and
-    raises on exhaustion / double free so leaks surface loudly."""
+    """Refcounted free-list allocator over pages ``1 .. num_pages-1`` (page 0
+    is the reserved null page).  ``alloc()`` hands a page out at refcount 1;
+    ``ref()`` lets another holder (a second block table, a prefix-index node)
+    pin it, and ``free()`` decrements — the page returns to the free list
+    only when the last holder drops it.  Tracks in-use and peak counts for
+    telemetry and raises on exhaustion / double free so leaks surface
+    loudly."""
 
     def __init__(self, num_pages: int):
         if num_pages < 2:
@@ -272,7 +292,7 @@ class PageAllocator:
         # pop() hands out low page ids first — keeps pools dense and makes
         # allocation order deterministic (replay/migration tests rely on it)
         self._free: List[int] = list(range(num_pages - 1, 0, -1))
-        self._owned: set = set()
+        self._refs: Dict[int, int] = {}
         self.peak_in_use = 0
 
     @property
@@ -281,7 +301,7 @@ class PageAllocator:
 
     @property
     def in_use(self) -> int:
-        return len(self._owned)
+        return len(self._refs)
 
     def alloc(self) -> int:
         if not self._free:
@@ -290,15 +310,27 @@ class PageAllocator:
                 "use) — raise kv_num_pages or lower the admitted batch"
             )
         p = self._free.pop()
-        self._owned.add(p)
-        self.peak_in_use = max(self.peak_in_use, len(self._owned))
+        self._refs[p] = 1
+        self.peak_in_use = max(self.peak_in_use, len(self._refs))
         return p
 
+    def ref(self, page: int) -> int:
+        """Pin an already-allocated page for an additional holder."""
+        if page not in self._refs:
+            raise RuntimeError(f"ref of unallocated page {page}")
+        self._refs[page] += 1
+        return page
+
+    def refcount(self, page: int) -> int:
+        return self._refs.get(page, 0)
+
     def free(self, page: int) -> None:
-        if page not in self._owned:
+        if page not in self._refs:
             raise RuntimeError(f"double free / foreign page {page}")
-        self._owned.remove(page)
-        self._free.append(page)
+        self._refs[page] -= 1
+        if self._refs[page] == 0:
+            del self._refs[page]
+            self._free.append(page)
 
 
 class PagedKVCache:
@@ -386,6 +418,47 @@ class PagedKVCache:
     def slot_blocks(self, slot: int) -> int:
         return len(self._owned[slot])
 
+    def slot_pages(self, slot: int) -> List[int]:
+        """The slot's page list in block order (block b → ``pages[b]``)."""
+        return list(self._owned[slot])
+
+    def splice(
+        self, slot: int, pages: List[int], tokens: int
+    ) -> Optional[Tuple[int, int, int]]:
+        """Map positions ``[0, tokens)`` of a fresh ``slot`` onto shared
+        ``pages`` (a prefix-cache hit).  Full pages are adopted *by
+        reference* — the slot's block table points at the shared page and
+        the allocator pins it, so ``release`` later just drops the pin.  A
+        trailing partial page cannot be shared (the slot will append into
+        its tail), so a fresh page is allocated for it and the caller must
+        copy the first ``rows`` rows of every pool array; returns
+        ``(src_page, dst_page, rows)`` describing that copy-on-write, or
+        ``None`` when ``tokens`` is page-aligned."""
+        if self._owned[slot]:
+            raise RuntimeError(
+                f"slot {slot} already holds pages — splice needs a fresh slot"
+            )
+        if tokens <= 0:
+            return None
+        nb = (tokens + self.page_size - 1) // self.page_size
+        if nb > len(pages):
+            raise ValueError(f"{tokens} tokens need {nb} pages, got {len(pages)}")
+        full = tokens // self.page_size
+        for i in range(full):
+            p = self.allocator.ref(pages[i])
+            self.tables[slot, i] = p
+            self._owned[slot].append(p)
+        cow = None
+        rem = tokens - full * self.page_size
+        if rem:
+            dst = self.allocator.alloc()
+            self.tables[slot, full] = dst
+            self._owned[slot].append(dst)
+            cow = (pages[full], dst, rem)
+        self.hiwater[slot] = tokens
+        self._dirty = True
+        return cow
+
     # -- device view ---------------------------------------------------------
     def table_device(self, device=None) -> jax.Array:
         if self._dirty or self._dev is None or device is not self._dev_device:
@@ -415,6 +488,186 @@ class PagedKVCache:
             "pages_free": self.allocator.num_free,
             "occupancy": in_use / max(1, self.num_pages - 1),
             "fragmentation": 1.0 - used_rows / alloc_rows if alloc_rows else 0.0,
+        }
+
+
+def _chunk_key(parent: bytes, tokens: np.ndarray) -> bytes:
+    """Chained digest of one prompt chunk: the node key commits to the whole
+    prefix (parent digest + this chunk's token bytes), so equal keys mean
+    equal token prefixes — the trie needs no token storage."""
+    h = hashlib.blake2b(parent, digest_size=16)
+    h.update(np.ascontiguousarray(tokens, np.int32).tobytes())
+    return h.digest()
+
+
+@dataclasses.dataclass
+class _PrefixNode:
+    key: bytes
+    parent: Optional["_PrefixNode"]
+    block0: int  # first cache block this node's pages cover
+    pages: List[int]
+    children: Dict[bytes, "_PrefixNode"] = dataclasses.field(default_factory=dict)
+    last_used: int = 0
+
+
+class PrefixIndex:
+    """Radix/trie over chunk-aligned prompt prefixes → shared KV page runs.
+
+    Keys are chained blake2b digests of ``chunk``-token prompt pieces, so a
+    node exists iff some published prompt shared that exact token prefix.
+    Each node pins (refcounts) the pool pages holding its chunk's KV rows;
+    because the prefill chunk grid is deterministic and quantisation is
+    chunk-boundary-deterministic, any prompt sharing the token prefix would
+    produce bit-identical rows — serving a hit via
+    :meth:`PagedKVCache.splice` is therefore exact, not approximate.
+
+    ``max_pages`` bounds the pages the index may pin; inserts beyond the
+    budget evict least-recently-used *leaf* nodes (interior nodes are
+    prefixes of live leaves and stay).  Eviction only drops the index's own
+    pin — a page still spliced into some slot's block table survives until
+    that slot releases it, so eviction can never free a pinned page."""
+
+    def __init__(
+        self,
+        chunk: int,
+        pager: PagedKVCache,
+        max_pages: Optional[int] = None,
+    ):
+        if chunk < 1:
+            raise ValueError(f"chunk must be ≥ 1, got {chunk}")
+        self.chunk = chunk
+        self.pager = pager
+        self.max_pages = max_pages
+        self.root = _PrefixNode(key=b"", parent=None, block0=0, pages=[])
+        self._nodes: List[_PrefixNode] = []
+        self._clock = 0
+        self.held_pages = 0
+        # cumulative telemetry
+        self.hits = 0
+        self.misses = 0
+        self.saved_tokens = 0
+        self.lookup_tokens = 0
+        self.evicted_pages = 0
+
+    def _touch(self, node: _PrefixNode) -> None:
+        self._clock += 1
+        node.last_used = self._clock
+
+    # -- lookup --------------------------------------------------------------
+    def lookup(
+        self, tokens: np.ndarray, limit: Optional[int] = None
+    ) -> Tuple[int, List[int]]:
+        """Longest chunk-aligned cached prefix of ``tokens`` (capped at
+        ``limit`` tokens).  Returns ``(matched_tokens, pages)`` where
+        ``pages[b]`` backs cache block ``b`` of the matched span — ready for
+        :meth:`PagedKVCache.splice`.  Matched nodes are LRU-touched."""
+        n = len(tokens) if limit is None else min(int(limit), len(tokens))
+        self.lookup_tokens += len(tokens)
+        node = self.root
+        key = node.key
+        run: Dict[int, int] = {}
+        matched = 0
+        for c in range(n // self.chunk):
+            key = _chunk_key(key, tokens[c * self.chunk : (c + 1) * self.chunk])
+            child = node.children.get(key)
+            if child is None:
+                break
+            node = child
+            self._touch(node)
+            # later nodes override shared boundary blocks (chunk % page_size
+            # ≠ 0): the deeper node's page holds the block's *full* rows
+            for i, p in enumerate(node.pages):
+                run[node.block0 + i] = p
+            matched = (c + 1) * self.chunk
+        if matched:
+            self.hits += 1
+            self.saved_tokens += matched
+        else:
+            self.misses += 1
+            return 0, []
+        nb = (matched + self.pager.page_size - 1) // self.pager.page_size
+        return matched, [run[b] for b in range(nb)]
+
+    # -- publish -------------------------------------------------------------
+    def publish(self, tokens: np.ndarray, upto: int, slot: int) -> int:
+        """Index the chunk-aligned prefix KV that ``slot`` just prefilled:
+        walk/extend the trie over ``tokens[:upto]`` and pin the slot's pages
+        backing each *new* chunk's rows.  Returns the number of nodes added.
+        Pages stay valid after the slot releases (the index holds its own
+        refcount), and published rows are immutable — decode appends at
+        positions ≥ the prompt length, never inside a published chunk."""
+        owned = self.pager.slot_pages(slot)
+        node = self.root
+        key = node.key
+        added = 0
+        for c in range(int(upto) // self.chunk):
+            lo, hi = c * self.chunk, (c + 1) * self.chunk
+            key = _chunk_key(key, tokens[lo:hi])
+            child = node.children.get(key)
+            if child is None:
+                b0, b1 = lo // self.pager.page_size, (hi - 1) // self.pager.page_size
+                if b1 >= len(owned):
+                    break  # slot rows not page-backed that far (shouldn't happen)
+                pages = owned[b0 : b1 + 1]
+                for p in pages:
+                    self.pager.allocator.ref(p)
+                child = _PrefixNode(key=key, parent=node, block0=b0, pages=pages)
+                node.children[key] = child
+                self._nodes.append(child)
+                self.held_pages += len(pages)
+                added += 1
+            node = child
+            self._touch(node)
+        self._evict()
+        return added
+
+    # -- eviction ------------------------------------------------------------
+    def _evict(self) -> None:
+        """LRU leaf eviction down to the page budget.  Dropping a node only
+        releases the *index's* refcount — pages spliced into live block
+        tables keep their other holders."""
+        if self.max_pages is None:
+            return
+        while self.held_pages > self.max_pages:
+            leaves = [n for n in self._nodes if not n.children]
+            if not leaves:
+                break
+            victim = min(leaves, key=lambda n: n.last_used)
+            self._drop_node(victim)
+
+    def _drop_node(self, node: _PrefixNode) -> None:
+        if node.parent is not None:
+            node.parent.children.pop(node.key, None)
+        self._nodes.remove(node)
+        for p in node.pages:
+            self.pager.allocator.free(p)
+        self.held_pages -= len(node.pages)
+        self.evicted_pages += len(node.pages)
+
+    def drop_all(self) -> None:
+        """Release every pin and forget the trie (re-shard / cache reset).
+        Cumulative hit/miss telemetry survives."""
+        for node in list(self._nodes):
+            for p in node.pages:
+                self.pager.allocator.free(p)
+        self._nodes = []
+        self.root = _PrefixNode(key=b"", parent=None, block0=0, pages=[])
+        self.held_pages = 0
+
+    # -- telemetry -----------------------------------------------------------
+    def stats(self) -> Dict[str, float]:
+        total = self.hits + self.misses
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "hit_rate": self.hits / total if total else 0.0,
+            "saved_tokens": self.saved_tokens,
+            "saved_frac": (
+                self.saved_tokens / self.lookup_tokens if self.lookup_tokens else 0.0
+            ),
+            "shared_pages": self.held_pages,
+            "evicted_pages": self.evicted_pages,
+            "nodes": len(self._nodes),
         }
 
 

@@ -62,8 +62,10 @@ class _InFlight:
     dev_index: int
     prompt: np.ndarray
     caches: Optional[Dict[str, jax.Array]] = None  # per-request decode-format caches
-    done: int = 0  # prompt tokens already prefilled
+    done: int = 0  # prompt tokens already prefilled (or served from cache)
     ready_t: float = 0.0  # pool-timeline moment the next chunk may start
+    prefix: int = 0  # leading tokens served by the prefix cache (skipped here)
+    seed: Optional[Dict] = None  # prefix KV rows [L, prefix, ...] to pre-load
 
 
 class PrefillWorker:
@@ -80,6 +82,7 @@ class PrefillWorker:
         extra: Optional[Dict] = None,
         prefill_time_fn: Optional[Callable[[int], float]] = None,
         max_chunks_per_poll: int = 1,
+        batch: int = 1,
     ):
         self.cfg = cfg
         self.cache_len = cache_len
@@ -92,6 +95,13 @@ class PrefillWorker:
         self.prefill_time_fn = prefill_time_fn
         self.max_chunks_per_poll = max(1, int(max_chunks_per_poll))
         self.chunked = model_mod.supports_chunked_prefill(cfg)
+        # batched multi-prompt prefill: pack up to ``batch`` pending prompts
+        # into one padded-and-masked prefill_chunk call per device, so short
+        # prompts stop serialising behind long ones.  Row-independent by
+        # construction (per-row starts/lengths mask), so streams stay
+        # bit-identical to the one-at-a-time path.
+        self.batch = max(1, int(batch))
+        self.batched = self.batch > 1 and model_mod.supports_batched_prefill(cfg)
         self.chunks_done = 0
         # fault-injection hook (repro.serving.faults): called before each
         # chunk's compute with (slot, dev_index, chunk_ordinal); may raise
@@ -122,11 +132,18 @@ class PrefillWorker:
                 p, toks, cfg, self.cache_len, extra=_call_extra(toks.shape[1])
             )
 
+        def _batched_fn(p, toks, caches, starts, lengths):
+            return model_mod.prefill_chunk_batched(
+                p, toks, caches, starts, lengths, cfg,
+                extra=_call_extra(toks.shape[0] * toks.shape[1]),
+            )
+
         self._chunk_jit = jax.jit(_chunk_fn)
         self._full_jit = jax.jit(_full_fn)
+        self._batch_jit = jax.jit(_batched_fn)
 
         self._queue: List[_InFlight] = []
-        self._current: List[Optional[_InFlight]] = [None] * len(self.devices)
+        self._current: List[List[_InFlight]] = [[] for _ in self.devices]
 
     # ------------------------------------------------------------------
     # pool membership (reconfigure support)
@@ -150,31 +167,48 @@ class PrefillWorker:
         ]
         cur = getattr(self, "_current", None)
         if cur:  # migrate in-flight work into the resized pool
-            carry = [e for e in cur if e is not None]
-            self._current = [None] * len(devs)
+            carry = [e for group in cur for e in group]
+            self._current = [[] for _ in devs]
             for e in carry:
                 e.dev_index = min(e.dev_index, len(devs) - 1)
                 if e.caches is not None:
                     e.caches = jax.device_put(e.caches, devs[e.dev_index])
-                if self._current[e.dev_index] is None:
-                    self._current[e.dev_index] = e
+                if len(self._current[e.dev_index]) < self.batch:
+                    self._current[e.dev_index].append(e)
                 else:
                     self._queue.insert(0, e)
 
     # ------------------------------------------------------------------
     # admission
     # ------------------------------------------------------------------
-    def submit(self, req: Request, slot: int, now: float) -> None:
-        """Queue a reserved request for prefill (FIFO)."""
+    def submit(
+        self,
+        req: Request,
+        slot: int,
+        now: float,
+        start: int = 0,
+        seed_caches: Optional[Dict] = None,
+    ) -> None:
+        """Queue a reserved request for prefill (FIFO).  A prefix-cache hit
+        passes ``start`` (chunk-aligned tokens already served by shared
+        pages) and ``seed_caches`` (those positions' KV rows, ``[L, start,
+        ...]`` per key) — the worker seeds its per-request cache with them
+        and skips straight to the first cold chunk."""
         prompt = req.prompt
         if prompt is None:
             rng = np.random.default_rng(req.rid)
             prompt = rng.integers(0, self.cfg.vocab_size, size=req.input_len, dtype=np.int32)
-        self._queue.append(_InFlight(req, slot, -1, np.asarray(prompt, np.int32), ready_t=now))
+        start = int(start)
+        self._queue.append(
+            _InFlight(
+                req, slot, -1, np.asarray(prompt, np.int32),
+                done=start, ready_t=now, prefix=start, seed=seed_caches,
+            )
+        )
 
     @property
     def num_pending(self) -> int:
-        return len(self._queue) + sum(e is not None for e in self._current)
+        return len(self._queue) + sum(len(g) for g in self._current)
 
     # ------------------------------------------------------------------
     # fault recovery
@@ -187,12 +221,12 @@ class PrefillWorker:
         the pool (``set_devices`` / ``engine.reconfigure``)."""
         displaced: List[Request] = []
         if 0 <= dev_index < len(self._current):
-            entry = self._current[dev_index]
-            if entry is not None:
-                self._current[dev_index] = None
+            for entry in self._current[dev_index]:
                 entry.caches = None
-                entry.done = 0
+                entry.seed = None
+                entry.done = entry.prefix = 0
                 displaced.append(entry.req)
+            self._current[dev_index] = []
         return displaced
 
     def cancel_slot(self, slot: int) -> Optional[Request]:
@@ -203,10 +237,11 @@ class PrefillWorker:
             if entry.slot == slot:
                 self._queue.pop(i)
                 return entry.req
-        for di, entry in enumerate(self._current):
-            if entry is not None and entry.slot == slot:
-                self._current[di] = None
-                return entry.req
+        for di, group in enumerate(self._current):
+            for entry in group:
+                if entry.slot == slot:
+                    group.remove(entry)
+                    return entry.req
         return None
 
     def run_sync(self, prompt: np.ndarray, slot: int, sink) -> int:
@@ -249,25 +284,53 @@ class PrefillWorker:
         pool-timeline completion times.
         """
         events: List[PrefillEvent] = []
+        # groups of size 1 take the exact legacy one-at-a-time path; larger
+        # groups (prefill_batch > 1 on a batchable architecture) fuse one
+        # padded chunk call per device
+        limit = self.batch if self.batched else 1
         for di in range(len(self.devices)):
-            if self._current[di] is None and self._queue:
+            group = self._current[di]
+            while len(group) < limit and self._queue:
                 entry = self._queue.pop(0)
                 if entry.caches is not None and entry.dev_index != di:
                     # a resize-displaced entry resumes on a different device:
                     # its partial caches must follow (params live per device)
                     entry.caches = jax.device_put(entry.caches, self.devices[di])
                 entry.dev_index = di
-                self._current[di] = entry
-            entry = self._current[di]
-            if entry is None:
+                group.append(entry)
+            if not group:
                 continue
             for _ in range(self.max_chunks_per_poll):
-                ev = self._advance(entry, sink)
-                if ev is not None:
-                    events.append(ev)
-                    self._current[di] = None
+                events.extend(self._advance_group(di, sink))
+                if not self._current[di]:
                     break
         return events
+
+    def _advance_group(self, di: int, sink) -> List[PrefillEvent]:
+        group = self._current[di]
+        if len(group) == 1:
+            ev = self._advance(group[0], sink)
+            if ev is not None:
+                self._current[di] = []
+                return [ev]
+            return []
+        return self._advance_batched(di, sink)
+
+    def _init_caches(self, entry: _InFlight, dev) -> Dict[str, jax.Array]:
+        """Fresh per-request caches; a prefix-cache hit pre-loads the shared
+        rows so cold chunks attend the full ``[0, start + c)`` span."""
+        caches = jax.device_put(
+            model_mod.init_decode_caches(self.cfg, 1, self.cache_len), dev
+        )
+        if entry.seed:
+            m = entry.prefix
+            for k, rows in entry.seed.items():
+                if k in caches:
+                    caches[k] = caches[k].at[:, 0, :m].set(
+                        jax.device_put(jnp.asarray(rows), dev).astype(caches[k].dtype)
+                    )
+            entry.seed = None
+        return caches
 
     def _advance(self, entry: _InFlight, sink) -> Optional[PrefillEvent]:
         if self.fault_hook is not None:
@@ -291,9 +354,7 @@ class PrefillWorker:
         lo = entry.done
         hi = min(lo + self.chunk, n)
         if entry.caches is None:
-            entry.caches = jax.device_put(
-                model_mod.init_decode_caches(self.cfg, 1, self.cache_len), dev
-            )
+            entry.caches = self._init_caches(entry, dev)
         toks = jax.device_put(jnp.asarray(entry.prompt[lo:hi])[None, :], dev)
         t0 = time.perf_counter()
         logits, entry.caches = self._chunk_jit(params, toks, entry.caches, jnp.int32(lo))
@@ -322,3 +383,65 @@ class PrefillWorker:
         first = int(np.argmax(np.asarray(logits[0])))
         entry.caches = None  # working copy dropped; KV already streamed out
         return PrefillEvent(entry.req, entry.slot, first, finish_t)
+
+    def _advance_batched(self, di: int, sink) -> List[PrefillEvent]:
+        """One fused chunk call for every request on device ``di``: each
+        row's tokens are padded to the widest member chunk and masked by its
+        own (start, length), so rows are computed exactly as the serial path
+        would — one kernel launch instead of ``len(group)``.  The device
+        timeline is charged once for the fused call (the batching win)."""
+        group = self._current[di]
+        if self.fault_hook is not None:
+            for entry in group:
+                self.fault_hook(entry.slot, entry.dev_index, self.chunks_done)
+        dev = self.devices[di]
+        params = self._params[di]
+        for entry in group:
+            if entry.caches is None:
+                entry.caches = self._init_caches(entry, dev)
+        B = len(group)
+        los = [e.done for e in group]
+        his = [min(e.done + self.chunk, len(e.prompt)) for e in group]
+        lens = [hi - lo for lo, hi in zip(los, his)]
+        cmax = max(lens)
+        toks = np.zeros((B, cmax), np.int32)
+        for i, e in enumerate(group):
+            toks[i, : lens[i]] = e.prompt[los[i] : his[i]]
+        keys = list(group[0].caches.keys())
+        stacked = {
+            k: jnp.concatenate([e.caches[k] for e in group], axis=1) for k in keys
+        }
+        toks_d = jax.device_put(jnp.asarray(toks), dev)
+        starts = jax.device_put(jnp.asarray(los, jnp.int32), dev)
+        lengths = jax.device_put(jnp.asarray(lens, jnp.int32), dev)
+        t0 = time.perf_counter()
+        logits, stacked = self._batch_jit(params, toks_d, stacked, starts, lengths)
+        logits.block_until_ready()
+        total = sum(lens)
+        dt = (
+            self.prefill_time_fn(total)
+            if self.prefill_time_fn
+            else time.perf_counter() - t0
+        )
+        start_t = max([self.busy_until[di]] + [e.ready_t for e in group])
+        finish_t = start_t + dt
+        self.busy_until[di] = finish_t
+        events: List[PrefillEvent] = []
+        logits_np: Optional[np.ndarray] = None
+        remaining: List[_InFlight] = []
+        for i, e in enumerate(group):
+            e.caches = {k: stacked[k][:, i : i + 1] for k in keys}
+            sink(e.slot, los[i], lens[i], e.caches)
+            e.done = his[i]
+            e.ready_t = finish_t
+            self.chunks_done += 1
+            if e.done >= len(e.prompt):
+                if logits_np is None:
+                    logits_np = np.asarray(logits)
+                first = int(np.argmax(logits_np[i]))
+                e.caches = None
+                events.append(PrefillEvent(e.req, e.slot, first, finish_t))
+            else:
+                remaining.append(e)
+        self._current[di] = remaining
+        return events

@@ -55,6 +55,10 @@ class WorkloadSpec:
     max_input: int = 512
     max_output: int = 2048
     seed: int = 0
+    # every prompt opens with the same ``shared_prefix_len`` tokens (a
+    # fleet-wide system prompt) before its unique tail; 0 = fully independent
+    # prompts.  The sampled lengths above size the *tails*.
+    shared_prefix_len: int = 0
 
 
 def long_prompt_spec(**overrides) -> WorkloadSpec:
@@ -64,6 +68,20 @@ def long_prompt_spec(**overrides) -> WorkloadSpec:
     prefill stalls every in-flight decode — and what
     ``benchmarks/prefill_disagg_bench.py`` drives against the prefill pool."""
     spec = dict(mean_input=512.0, mean_output=64.0, max_input=4096, max_output=256)
+    spec.update(overrides)
+    return WorkloadSpec(**spec)
+
+
+def shared_prefix_spec(**overrides) -> WorkloadSpec:
+    """Shared-system-prompt preset (assistant / agent fleets): every request
+    opens with the same long system prompt, then a short unique user turn.
+    This is the workload the page-granular prefix cache exists for — after
+    the first request, the shared span is pure block-table splicing — and
+    what ``benchmarks/prefix_cache_bench.py`` drives."""
+    spec = dict(
+        mean_input=8.0, mean_output=24.0, max_input=32, max_output=64,
+        shared_prefix_len=48,
+    )
     spec.update(overrides)
     return WorkloadSpec(**spec)
 
@@ -80,12 +98,20 @@ def sample_requests(
     ins = np.clip((ins / ins.mean() * spec.mean_input).astype(int) + 1, 1, spec.max_input)
     outs = rng.lognormal(mean=0.0, sigma=1.0, size=n)
     outs = np.clip((outs / outs.mean() * spec.mean_output).astype(int) + 1, 1, spec.max_output)
+    shared = None
+    if spec.shared_prefix_len > 0:
+        shared = rng.integers(
+            0, spec.vocab_size, size=spec.shared_prefix_len, dtype=np.int32
+        )
     reqs = []
     for i, t in enumerate(np.sort(arrivals)):
         prompt = None
+        n_in = int(ins[i]) + spec.shared_prefix_len
         if with_prompts:
             prompt = rng.integers(0, spec.vocab_size, size=int(ins[i]), dtype=np.int32)
+            if shared is not None:
+                prompt = np.concatenate([shared, prompt])
         reqs.append(
-            Request(rid=i, arrival=float(t), input_len=int(ins[i]), output_len=int(outs[i]), prompt=prompt, token_times=[])
+            Request(rid=i, arrival=float(t), input_len=n_in, output_len=int(outs[i]), prompt=prompt, token_times=[])
         )
     return reqs

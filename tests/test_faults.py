@@ -322,9 +322,9 @@ def test_admission_backpressure_bounds_prefill_queue(dsv2):
     pending_at_submit = []
     orig = eng.prefill_worker.submit
 
-    def spy(req, slot, now):
+    def spy(req, slot, now, **kw):
         pending_at_submit.append(eng.prefill_worker.num_pending)
-        return orig(req, slot, now=now)
+        return orig(req, slot, now=now, **kw)
 
     eng.prefill_worker.submit = spy
     m = eng.run(_reqs(cfg, n=4), max_steps=2000)

@@ -360,6 +360,42 @@ def test_paged_kernel_ignores_unbacked_tail():
     np.testing.assert_array_equal(np.asarray(base), np.asarray(got))
 
 
+def test_paged_decode_backend_dispatch(monkeypatch):
+    """REPRO_PAGED_DECODE forces the read path; auto picks gather off-TPU
+    (interpreted Pallas is debug-speed) and the kernel on TPU."""
+    import jax
+
+    from repro.models.attention import paged_decode_backend
+
+    monkeypatch.setenv("REPRO_PAGED_DECODE", "kernel")
+    assert paged_decode_backend() == "kernel"
+    monkeypatch.setenv("REPRO_PAGED_DECODE", "gather")
+    assert paged_decode_backend() == "gather"
+    monkeypatch.delenv("REPRO_PAGED_DECODE")
+    expect = "kernel" if jax.default_backend() == "tpu" else "gather"
+    assert paged_decode_backend() == expect
+
+
+def test_paged_decode_kernel_backend_streams_bit_identical(monkeypatch):
+    """Serving through the paged Pallas decode kernel (interpreted off-TPU)
+    emits the same greedy token streams as the jnp gather path: flash and
+    dense softmax agree to float tolerance, and greedy argmax sees identical
+    winners.  The env var is read at trace time — each engine jits its own
+    decode closure, so forcing it per-run is effective."""
+    cfg = get_config("phi4-mini-3.8b-reduced")
+    params = model_mod.init_params(cfg, 0)
+    streams = {}
+    for backend in ("gather", "kernel"):
+        monkeypatch.setenv("REPRO_PAGED_DECODE", backend)
+        eng = ServingEngine(cfg, params, max_batch=2, cache_len=64,
+                            scheduler="none", kv_page_size=PS,
+                            step_time_fn=lambda n: 2e-3)
+        m = eng.run(_reqs(cfg, 3, mean_out=4, max_out=6), max_steps=2000)
+        assert m["completed"] == 3
+        streams[backend] = _streams(eng)
+    assert streams["kernel"] == streams["gather"]
+
+
 # ---------------------------------------------------------------------------
 # operator surface: CLI, telemetry → autoscaler
 # ---------------------------------------------------------------------------
