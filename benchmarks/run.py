@@ -32,6 +32,7 @@ MODULES = [
     "disagg_pipeline_bench",
     "prefill_disagg_bench",
     "fault_recovery_bench",
+    "slo_schedule_bench",
     "paged_kv_bench",
     "prefix_cache_bench",
     "roofline_report",

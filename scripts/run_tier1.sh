@@ -16,4 +16,16 @@ TIMEOUT_ARGS=()
 if python -c "import pytest_timeout" >/dev/null 2>&1; then
   TIMEOUT_ARGS=(--timeout=600 --timeout-method=thread)
 fi
-exec python -m pytest -x -q ${TIMEOUT_ARGS[@]+"${TIMEOUT_ARGS[@]}"} "$@"
+# Coverage floor on the serving subsystem (pytest-cov): opt-in via
+# REPRO_COV=1 — CI's fast job sets it; the pinned container (no pip
+# install) and quick local loops skip it.  Same double gate as the
+# timeout: env var AND plugin importable.
+COV_ARGS=()
+if [ "${REPRO_COV:-0}" = "1" ] && python -c "import pytest_cov" >/dev/null 2>&1; then
+  COV_ARGS=(--cov=repro.serving --cov-report=term-missing:skip-covered
+            --cov-fail-under="${REPRO_COV_FLOOR:-70}")
+fi
+exec python -m pytest -x -q \
+  ${TIMEOUT_ARGS[@]+"${TIMEOUT_ARGS[@]}"} \
+  ${COV_ARGS[@]+"${COV_ARGS[@]}"} \
+  "$@"

@@ -84,6 +84,27 @@ def main():
         help="admission deadline in seconds after arrival; requests that wait "
         "longer while the engine is saturated are rejected",
     )
+    ap.add_argument(
+        "--trace", default=None, metavar="PATH",
+        help="replay a multi-tenant workload file (TraceSpec JSON: duration, "
+        "seed, tenants with request class / arrival process / priority / "
+        "SLOs); replaces --rate/--duration/--workload",
+    )
+    ap.add_argument(
+        "--sched", default="fifo", choices=["fifo", "priority"],
+        help="request admission scheduler: fifo = strict arrival order; "
+        "priority = higher Request.priority first, preempting lower-priority "
+        "active slots via KV spill/restore (requires --kv-page-size)",
+    )
+    ap.add_argument(
+        "--slo-ttft", type=float, default=None, metavar="S",
+        help="default TTFT SLO (s, arrival → first token) stamped on every "
+        "request that doesn't already carry one from the trace file",
+    )
+    ap.add_argument(
+        "--slo-tpot", type=float, default=None, metavar="S",
+        help="default TPOT SLO (s, p99 inter-token gap), same stamping rule",
+    )
     args = ap.parse_args()
 
     from repro.configs import get_config
@@ -92,7 +113,7 @@ def main():
     from repro.models import model as model_mod
     from repro.serving.engine import ServingEngine
     from repro.serving.request import WorkloadSpec, sample_requests, shared_prefix_spec
-    from repro.serving.trace import poisson_arrivals
+    from repro.serving.trace import TraceSpec, poisson_arrivals
 
     cfg = get_config(args.arch + "-reduced")
     params = model_mod.init_params(cfg, args.seed)
@@ -101,16 +122,27 @@ def main():
         C = args.slots or (cfg.num_experts // args.n_instances + 1)
         trace = make_routing_trace(2048, cfg.num_experts, cfg.top_k, skew=0.8, seed=args.seed)
         layout = build_layout(trace, cfg.num_experts, args.n_instances, C)
-    if args.workload == "shared-prefix":
-        spec = shared_prefix_spec(vocab_size=cfg.vocab_size)
+    if args.trace is not None:
+        with open(args.trace) as fh:
+            tspec = TraceSpec.from_json(fh.read())
+        reqs = tspec.build(vocab_size=cfg.vocab_size, with_prompts=True)
     else:
-        spec = WorkloadSpec(
-            mean_input=8, mean_output=24, vocab_size=cfg.vocab_size, max_input=48, max_output=64
-        )
-    reqs = sample_requests(spec, poisson_arrivals(args.rate, args.duration, args.seed), with_prompts=True)
+        if args.workload == "shared-prefix":
+            spec = shared_prefix_spec(vocab_size=cfg.vocab_size)
+        else:
+            spec = WorkloadSpec(
+                mean_input=8, mean_output=24, vocab_size=cfg.vocab_size, max_input=48, max_output=64
+            )
+        reqs = sample_requests(spec, poisson_arrivals(args.rate, args.duration, args.seed), with_prompts=True)
+    for r in reqs:
+        if args.slo_ttft is not None and r.ttft_slo is None:
+            r.ttft_slo = args.slo_ttft
+        if args.slo_tpot is not None and r.tpot_slo is None:
+            r.tpot_slo = args.slo_tpot
     if args.request_deadline is not None:
         for r in reqs:
-            r.deadline = r.arrival + args.request_deadline
+            if r.deadline is None:
+                r.deadline = r.arrival + args.request_deadline
     fault_plan = None
     if args.fault_plan is not None:
         from repro.serving.faults import FaultPlan
@@ -136,11 +168,14 @@ def main():
         prefix_cache=args.prefix_cache,
         prefix_cache_pages=args.prefix_cache_pages,
         prefill_batch=args.prefill_batch,
+        sched=args.sched,
     )
     print(
         f"serving {len(reqs)} requests on {cfg.name} "
         f"(scheduler={args.scheduler}, executor={args.executor}, "
-        f"admission={eng.admission}, n_prefill={args.n_prefill}"
+        f"admission={eng.admission}, sched={args.sched}, "
+        f"n_prefill={args.n_prefill}"
+        + (f", trace={args.trace}" if args.trace else "")
         + (f", fault_plan={args.fault_plan}" if fault_plan else "")
         + ")"
     )

@@ -52,9 +52,21 @@ from repro.models import model as model_mod
 from repro.models import moe as moe_mod
 from repro.models import transformer
 from repro.models.ffn import ffn
-from repro.serving.kv_cache import PagedKVCache, PrefixIndex
+from repro.serving.kv_cache import PagedKVCache, PrefixIndex, SpilledKV
 
 _KV_KEYS = {"k": "kv_k", "v": "kv_v", "k_scale": "kv_k_scale", "v_scale": "kv_v_scale"}
+
+
+@dataclasses.dataclass
+class SpilledSlotKV:
+    """A preempted slot's detached KV on a disagg executor: the shard-local
+    :class:`SpilledKV` record, the shard that owns the pages (ids are
+    pool-local, so restores are shard-affine), and the executor-level live
+    length to put back into ``_slot_len`` on restore."""
+
+    shard: int
+    rec: SpilledKV
+    tokens: int
 
 
 @dataclasses.dataclass
@@ -574,6 +586,44 @@ class DisaggExecutor:
             return
         si = self._shard_of(slot)
         self._pagers[si].release(slot - self.shards[si].lo)
+
+    def shard_of(self, slot: int) -> int:
+        """Which attention shard owns ``slot`` (spill/restore must re-attach
+        on the same shard — page ids are pool-local)."""
+        return self._shard_of(slot)
+
+    def spill_slot(self, slot: int) -> Tuple["SpilledSlotKV", int]:
+        """Detach ``slot``'s KV pages for preemption (no copy): the shard
+        pager's block-table row moves into a :class:`SpilledSlotKV` record
+        and the executor forgets the slot's live length.  Returns the record
+        and the shard index a restore must target.
+
+        The record is only valid while this shard's page pool lives: any
+        attention re-shard (device loss, reconfigure, degrade-to-mono)
+        rebuilds the pools from slot-owned pages and dissolves detached
+        ones — the engine then falls back to restore-by-replay."""
+        if self._pagers is None:
+            raise RuntimeError("spill requires paged KV (kv_page_size)")
+        si = self._shard_of(slot)
+        rec = self._pagers[si].spill(slot - self.shards[si].lo)
+        payload = SpilledSlotKV(shard=si, rec=rec, tokens=int(self._slot_len[slot]))
+        self._slot_len[slot] = 0
+        return payload, si
+
+    def restore_slot(self, slot: int, payload: "SpilledSlotKV") -> None:
+        """Re-attach a spilled record to fresh ``slot`` on its home shard."""
+        si = self._shard_of(slot)
+        if si != payload.shard:
+            raise RuntimeError(
+                f"slot {slot} lives on shard {si}, spilled KV belongs to "
+                f"shard {payload.shard}"
+            )
+        self._pagers[si].restore(slot - self.shards[si].lo, payload.rec)
+        self._slot_len[slot] = payload.tokens
+
+    def drop_spilled(self, payload: "SpilledSlotKV") -> None:
+        """Abandon a spilled record: return its page references to the pool."""
+        self._pagers[payload.shard].drop_spilled(payload.rec)
 
     # ------------------------------------------------------------------
     # prefix cache (shard-local radix reuse)

@@ -48,8 +48,9 @@ The engine serves a stream of requests against one model deployment:
 
 from __future__ import annotations
 
+import dataclasses
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -94,6 +95,24 @@ SCHEDULERS = {
     "none": None,
 }
 
+# request-level admission schedulers (``sched=``, distinct from the MoE
+# replica-slot ``scheduler=``): fifo = strict arrival order, priority =
+# higher Request.priority first with preemption via KV spill/restore
+ADMISSION_SCHEDS = ("fifo", "priority")
+
+
+@dataclasses.dataclass
+class _SpillRecord:
+    """A preempted request waiting off-batch: its detached KV payload (a
+    mono :class:`SpilledKV` or disagg ``SpilledSlotKV``) and, on disagg, the
+    shard the pages must re-attach to.  ``payload=None`` means the pages
+    were dissolved by an attention re-shard while spilled — the restore
+    falls back to deterministic replay."""
+
+    req: Request
+    payload: Optional[Any]
+    shard: Optional[int] = None
+
 
 class ServingEngine:
     def __init__(
@@ -128,6 +147,7 @@ class ServingEngine:
         prefix_cache: bool = False,  # page-granular radix prefix reuse (needs paging)
         prefix_cache_pages: Optional[int] = None,  # index pin budget (None = unbounded)
         prefill_batch: int = 1,  # prompts fused per prefill-device chunk call
+        sched: str = "fifo",  # request admission: fifo | priority (preemptive)
     ):
         self.cfg = cfg
         self.params = params
@@ -155,6 +175,16 @@ class ServingEngine:
                 "(a zero bound would close admission permanently)"
             )
         self.max_prefill_queue = max_prefill_queue
+        if sched not in ADMISSION_SCHEDS:
+            raise ValueError(
+                f"unknown admission scheduler {sched!r}; choose from "
+                f"{ADMISSION_SCHEDS}"
+            )
+        self.sched = sched
+        self._spilled: List[_SpillRecord] = []  # preempted, awaiting restore
+        self.preempt_count = 0
+        self.restore_count = 0
+        self.spill_replay_count = 0  # restores that had to replay (pages lost)
         self.kv_page_size = kv_page_size
         self.kv_num_pages = kv_num_pages
         self.paged: Optional[PagedKVCache] = None  # mono-executor page manager
@@ -395,6 +425,9 @@ class ServingEngine:
             )
             return
         lost_rows = ex.drop_attn_device(fault.index)
+        # the re-shard rebuilt every shard's page pool from slot-owned pages
+        # — KV detached into spill records dissolved with the old pools
+        self._invalidate_spills()
         self._rebuild_lost_slots(lost_rows)
 
     def _recover_prefill_loss(self, fault: PoolFault) -> None:
@@ -531,6 +564,8 @@ class ServingEngine:
         self.disagg = None
         self.executor_name = "mono"
         self.degraded_reason = reason
+        # shard pagers died with the executor: spilled KV restores by replay
+        self._invalidate_spills()
         if lost_rows:
             self._rebuild_lost_slots(lost_rows)
 
@@ -698,6 +733,170 @@ class ServingEngine:
             self.prefix.publish(tokens, upto, slot)
 
     # ------------------------------------------------------------------
+    # priority scheduling: preemption via KV spill/restore
+    # ------------------------------------------------------------------
+    def _preempt_capable(self) -> bool:
+        """Preemption needs paged KV — spill is a block-table detach, and a
+        contiguous cache has no tables to detach."""
+        if self.paged is not None:
+            return True
+        return self.disagg is not None and self.disagg._pagers is not None
+
+    def _find_slot(self, shard: Optional[int]) -> Optional[int]:
+        """Lowest free slot, restricted to one disagg shard when a spilled
+        record must re-attach where its pages live."""
+        free = self.slots.free_slots
+        if shard is None or self.disagg is None:
+            return free[0] if free else None
+        for s in free:
+            if self.disagg.shard_of(s) == shard:
+                return s
+        return None
+
+    def _pick_victim(self, priority: int, shard: Optional[int]) -> Optional[int]:
+        """The active slot to preempt for a priority-``priority`` candidate:
+        strictly lower priority only (equal priority never preempts — that
+        would thrash), preferring the least-generated victim (least work
+        parked off-batch), slot index breaking ties deterministically."""
+        best = None
+        for s in self.slots.active_slots:
+            if shard is not None and self.disagg is not None:
+                if self.disagg.shard_of(s) != shard:
+                    continue
+            req = self.slots.slot_req[s]
+            if req.priority >= priority:
+                continue
+            key = (req.priority, req.generated, s)
+            if best is None or key < best[0]:
+                best = (key, s)
+        return None if best is None else best[1]
+
+    def preempt_slot(self, slot: int) -> Request:
+        """Preempt an ACTIVE slot: detach its KV pages into a spill record
+        (block-table move, zero copy — prefix-cache pins ride along via
+        their refcounts) and free the slot.  The request keeps its stream
+        state (``tokens_out``, ``generated``) and resumes bit-identically
+        when a slot frees up or its priority wins one back."""
+        if self.slots.state[slot] != ACTIVE:
+            raise RuntimeError(
+                f"slot {slot} is {self.slots.state[slot]}, cannot preempt"
+            )
+        if self.paged is not None:
+            payload, shard = self.paged.spill(slot), None
+        elif self.disagg is not None and self.disagg._pagers is not None:
+            payload, shard = self.disagg.spill_slot(slot)
+        else:
+            raise RuntimeError("preemption requires paged KV (set kv_page_size)")
+        req = self.slots.release(slot)
+        # slot's pages moved to the record, so the usual free-on-release is
+        # a no-op — but the call keeps release paths uniform (and drops
+        # nothing because spill already emptied the ownership list)
+        self._release_pages(slot)
+        req.preemptions += 1
+        self._spilled.append(_SpillRecord(req=req, payload=payload, shard=shard))
+        self.preempt_count += 1
+        return req
+
+    def _restore_record(self, rec: _SpillRecord, slot: int) -> None:
+        """Re-admit a spilled request into free ``slot``: re-attach its
+        pages (or rebuild them by deterministic replay when a re-shard
+        dissolved the pool they lived in) and resume decode at
+        ``input_len + generated`` with the last emitted token as input."""
+        req = rec.req
+        self.slots.reserve(req, slot=slot)
+        if rec.payload is None:
+            self.slots.resume(slot)
+            self._replay_slot(slot)
+            self.spill_replay_count += 1
+        else:
+            if self.paged is not None:
+                self.paged.restore(slot, rec.payload)
+            else:
+                self.disagg.restore_slot(slot, rec.payload)
+            self.slots.resume(slot)
+        self.tokens = self.tokens.at[slot, 0].set(req.tokens_out[-1])
+        self.restore_count += 1
+
+    def _drop_spill(self, rec: _SpillRecord) -> None:
+        """Abandon a spill record (deadline lapsed): free its pages."""
+        if rec.payload is None:
+            return
+        if self.paged is not None:
+            self.paged.drop_spilled(rec.payload)
+        elif self.disagg is not None:
+            self.disagg.drop_spilled(rec.payload)
+
+    def _invalidate_spills(self) -> None:
+        """An attention re-shard (device loss, reconfigure, degrade) rebuilt
+        the page pools from slot-owned pages — detached spill payloads
+        dissolved with the old pools.  Downgrade every record to
+        restore-by-replay (bit-exact by construction, like fault replay)."""
+        for rec in self._spilled:
+            rec.payload = None
+            rec.shard = None
+
+    def _schedule_admission(self, waiting: List[Request]) -> List[Request]:
+        """Place arrived work into slots.  ``sched="fifo"`` is the legacy
+        strict-arrival-order loop.  ``sched="priority"`` merges spilled
+        (restorable) and new requests into one candidate order — priority
+        first, restores before fresh admits on ties, then arrival — and,
+        when no slot is free, spills the lowest-priority active slot for a
+        strictly higher-priority candidate."""
+        if self.sched == "fifo":
+            while (
+                waiting
+                and waiting[0].arrival <= self.clock
+                and self.slots.free_slots
+                and self._admission_open()
+            ):
+                req = waiting.pop(0)
+                if self.admission == "pipelined":
+                    self._submit_request(req)
+                else:
+                    self._prefill_request(req)
+            return waiting
+        while True:
+            cands: List[tuple] = []
+            for rec in self._spilled:
+                cands.append(
+                    (-rec.req.priority, 0, rec.req.arrival, rec.req.rid, rec)
+                )
+            for r in waiting:
+                if r.arrival <= self.clock:
+                    cands.append((-r.priority, 1, r.arrival, r.rid, r))
+            cands.sort(key=lambda c: c[:4])
+            progressed = False
+            for key in cands:
+                item = key[-1]
+                is_restore = isinstance(item, _SpillRecord)
+                # restores bypass prefill backpressure: they need no prefill
+                if not is_restore and not self._admission_open():
+                    continue
+                shard = item.shard if is_restore else None
+                slot = self._find_slot(shard)
+                if slot is None and self._preempt_capable():
+                    prio = item.req.priority if is_restore else item.priority
+                    victim = self._pick_victim(prio, shard)
+                    if victim is not None:
+                        self.preempt_slot(victim)
+                        slot = self._find_slot(shard)
+                if slot is None:
+                    continue
+                if is_restore:
+                    self._spilled.remove(item)
+                    self._restore_record(item, slot)
+                else:
+                    waiting.remove(item)
+                    if self.admission == "pipelined":
+                        self._submit_request(item)
+                    else:
+                        self._prefill_request(item)
+                progressed = True
+                break
+            if not progressed:
+                return waiting
+
+    # ------------------------------------------------------------------
     # admission
     # ------------------------------------------------------------------
     def _prefill_request(self, req: Request) -> None:
@@ -859,7 +1058,9 @@ class ServingEngine:
         """Serve all requests (arrivals gated by the engine clock)."""
         waiting = sorted(requests, key=lambda r: r.arrival)
         steps = 0
-        while (waiting or self.slots.num_active or self._prefill_pending()) and steps < max_steps:
+        while (
+            waiting or self._spilled or self.slots.num_active or self._prefill_pending()
+        ) and steps < max_steps:
             # admission control: reject arrived requests whose deadline lapsed
             # while the engine was saturated (they never held a slot)
             if any(r.deadline is not None for r in waiting):
@@ -886,18 +1087,15 @@ class ServingEngine:
                 ):
                     if self.cancel_slot(slot) is not None:
                         self._reject(req)
-            # admit arrived requests into free slots
-            while (
-                waiting
-                and waiting[0].arrival <= self.clock
-                and self.slots.free_slots
-                and self._admission_open()
-            ):
-                req = waiting.pop(0)
-                if self.admission == "pipelined":
-                    self._submit_request(req)
-                else:
-                    self._prefill_request(req)
+            # a spilled (preempted) request whose deadline lapsed off-batch
+            # is dropped: its detached pages return to the pool
+            for rec in list(self._spilled):
+                if rec.req.deadline is not None and self.clock > rec.req.deadline:
+                    self._spilled.remove(rec)
+                    self._drop_spill(rec)
+                    self._reject(rec.req)
+            # admit arrived requests into slots (fifo or priority/preemptive)
+            waiting = self._schedule_admission(waiting)
             self._poll_prefill()
             if self.slots.num_active == 0:
                 if self._ready:  # idle: jump to the next prefill completion
@@ -933,6 +1131,10 @@ class ServingEngine:
         relower = self.disagg.reconfigure(
             n_attn=n_attn, n_moe=n_moe, layout=layout, n_prefill=n_prefill
         )
+        if relower.get("attn"):
+            # attention re-shard rebuilt the page pools: detached spill
+            # payloads dissolved — downgrade them to restore-by-replay
+            self._invalidate_spills()
         self.layout = self.disagg.layout
         if relower.get("prefill"):
             self.prefill_worker.set_devices(
@@ -946,6 +1148,28 @@ class ServingEngine:
         out: Dict = {"completed": len(done), "tokens": sum(r.generated for r in done)}
         out["truncated"] = sum(1 for r in done if r.truncated)
         out["rejected"] = len(self.rejected)
+        out["preemptions"] = self.preempt_count
+        out["restores"] = self.restore_count
+        if self.spill_replay_count:
+            out["spill_replays"] = self.spill_replay_count
+        # SLO attainment over every *measured* request (one that carries a
+        # TTFT or TPOT target): rejected/unserved requests count as misses,
+        # so shedding load can never inflate attainment
+        measured = [
+            r for r in done + self.rejected if r.slo_ok() is not None
+        ]
+        if measured:
+            per_tenant: Dict[str, List[bool]] = {}
+            for r in measured:
+                per_tenant.setdefault(r.tenant, []).append(bool(r.slo_ok()))
+            out["slo"] = {
+                "measured": len(measured),
+                "attained": sum(1 for r in measured if r.slo_ok()),
+                "attainment": sum(1 for r in measured if r.slo_ok()) / len(measured),
+                "per_tenant": {
+                    t: sum(v) / len(v) for t, v in sorted(per_tenant.items())
+                },
+            }
         out["decode_stall_time"] = self.decode_stall_time
         out["prefill_chunks"] = self.prefill_worker.chunks_done
         if self.paged is not None:

@@ -128,11 +128,18 @@ class SlotManager:
         return s
 
     # -- pipelined admission -------------------------------------------------
-    def reserve(self, req: Request) -> int:
+    def reserve(self, req: Request, slot: Optional[int] = None) -> int:
+        """Reserve the lowest free slot, or a specific free ``slot`` (the
+        spill/restore path needs shard affinity on disagg executors)."""
         free = self.free_slots
         if not free:
             raise RuntimeError("no free slot")
-        s = free[0]
+        if slot is None:
+            s = free[0]
+        elif slot in free:
+            s = slot
+        else:
+            raise RuntimeError(f"slot {slot} is {self.state[slot]}, not free")
         self.slot_req[s] = req
         self.state[s] = RESERVED
         req.slot = s
@@ -163,6 +170,19 @@ class SlotManager:
             raise RuntimeError(f"slot {slot} is {self.state[slot]}, cannot activate")
         self.state[slot] = ACTIVE
         self.positions[slot] = self.slot_req[slot].input_len
+
+    def resume(self, slot: int) -> None:
+        """RESERVED → ACTIVE at the request's restored decode position.
+
+        The re-admission half of preemption: unlike ``activate`` (which
+        starts decode right after prefill, at ``input_len``), a resumed
+        request continues from wherever the spill interrupted it —
+        ``input_len + generated`` rows of KV are live again."""
+        if self.state[slot] != RESERVED:
+            raise RuntimeError(f"slot {slot} is {self.state[slot]}, cannot resume")
+        req = self.slot_req[slot]
+        self.state[slot] = ACTIVE
+        self.positions[slot] = req.input_len + req.generated
 
     def advance(self, slot: int) -> None:
         self.positions[slot] += 1
@@ -333,6 +353,17 @@ class PageAllocator:
             self._free.append(page)
 
 
+@dataclasses.dataclass
+class SpilledKV:
+    """A preempted slot's detached KV: its page list (block order) and the
+    rows written.  The pages keep the refcounts the slot held — spilling is
+    an ownership transfer, not a copy — so prefix-shared pages stay pinned
+    by their other holders while the request waits off-batch."""
+
+    pages: List[int]
+    tokens: int
+
+
 class PagedKVCache:
     """Block tables + page lifecycle for one batched paged cache pool.
 
@@ -398,6 +429,48 @@ class PagedKVCache:
         self._owned[slot] = []
         self.tables[slot, :] = NULL_PAGE
         self.hiwater[slot] = 0
+
+    # -- preemption: spill / restore -----------------------------------------
+    def spill(self, slot: int) -> "SpilledKV":
+        """Detach ``slot``'s KV for preemption: the page list moves, in block
+        order, from the slot's block table into a :class:`SpilledKV` record.
+
+        No page data is touched and no refcount changes — ownership of the
+        already-held references simply transfers to the record, so a page
+        pinned by the prefix cache (or spliced into another slot) stays
+        shared exactly as before.  The slot is left empty, ready for reuse;
+        :meth:`restore` re-attaches the record to a fresh slot later."""
+        rec = SpilledKV(pages=list(self._owned[slot]), tokens=int(self.hiwater[slot]))
+        if self._owned[slot]:
+            self._dirty = True
+        self._owned[slot] = []
+        self.tables[slot, :] = NULL_PAGE
+        self.hiwater[slot] = 0
+        return rec
+
+    def restore(self, slot: int, rec: "SpilledKV") -> None:
+        """Re-attach a spilled record to a fresh ``slot`` (the inverse of
+        :meth:`spill`): block ``b`` maps back to ``rec.pages[b]``, the
+        high-water mark returns to ``rec.tokens``.  Again no copy and no
+        refcount traffic — the record's ownership moves to the slot."""
+        if self._owned[slot]:
+            raise RuntimeError(
+                f"slot {slot} already holds pages — restore needs a fresh slot"
+            )
+        for b, page in enumerate(rec.pages):
+            self.tables[slot, b] = page
+        self._owned[slot] = list(rec.pages)
+        self.hiwater[slot] = rec.tokens
+        if rec.pages:
+            self._dirty = True
+
+    def drop_spilled(self, rec: "SpilledKV") -> None:
+        """Abandon a spilled record (deadline lapsed, request cancelled):
+        release the record's page references back to the pool."""
+        for page in rec.pages:
+            self.allocator.free(page)
+        rec.pages = []
+        rec.tokens = 0
 
     def rows_of(self, slot: int, start: int, length: int):
         """(pages, offsets) addressing positions ``[start, start+length)``

@@ -36,6 +36,16 @@ class Request:
     # then one per decode step) — lets tests assert bit-identical streams
     # across executors/admission modes, not just matching counts
     tokens_out: Optional[List[int]] = None
+    # -- multi-tenant / SLO fields (trace replay harness) --------------------
+    tenant: str = "default"
+    klass: str = "chat"  # chat | long-context | batch-offline
+    # higher wins under sched="priority": admitted first, and may preempt a
+    # strictly lower-priority active slot (its KV spills, no copy)
+    priority: int = 0
+    ttft_slo: Optional[float] = None  # seconds, arrival → first token
+    tpot_slo: Optional[float] = None  # seconds, p99 inter-token gap
+    # times this request's slot was preempted (KV spilled, later restored)
+    preemptions: int = 0
 
     def tpot_p(self, q: float) -> float:
         """Per-token latency percentile over the decode phase."""
@@ -43,6 +53,26 @@ class Request:
             return 0.0
         gaps = np.diff(self.token_times)
         return float(np.percentile(gaps, q))
+
+    def ttft(self) -> Optional[float]:
+        """Arrival → first token, or None if the request was never served."""
+        if self.prefill_done < 0:
+            return None
+        return self.prefill_done - self.arrival
+
+    def slo_ok(self) -> Optional[bool]:
+        """Did this request meet its SLOs?  None when it carries none (not
+        measured); False when it was rejected or never served — an unserved
+        request with a latency target is an SLO miss, not a free pass."""
+        if self.ttft_slo is None and self.tpot_slo is None:
+            return None
+        if self.rejected or self.prefill_done < 0:
+            return False
+        if self.ttft_slo is not None and self.ttft() > self.ttft_slo:
+            return False
+        if self.tpot_slo is not None and self.tpot_p(99.0) > self.tpot_slo:
+            return False
+        return True
 
 
 @dataclasses.dataclass
@@ -86,18 +116,38 @@ def shared_prefix_spec(**overrides) -> WorkloadSpec:
     return WorkloadSpec(**spec)
 
 
-def sample_requests(
-    spec: WorkloadSpec, arrivals: np.ndarray, with_prompts: bool = False
-) -> List[Request]:
-    """One request per arrival time, lengths from lognormal fits (heavy tail,
-    as observed in ShareGPT traces)."""
-    rng = np.random.default_rng(spec.seed)
-    n = len(arrivals)
-    # lognormal with sigma≈1 → heavy-tailed; scale to requested means
+def sample_lengths(
+    spec: WorkloadSpec, n: int, rng: np.random.Generator
+) -> "tuple[np.ndarray, np.ndarray]":
+    """The single length-sampling path: lognormal with sigma≈1 (heavy tail,
+    as observed in ShareGPT traces), scaled to the spec's means.  Both
+    ``sample_requests`` and the ``ClusterSimulator`` derive lengths through
+    here, so the replayed engine and the analytic simulator see one workload
+    distribution instead of two independent guesses."""
     ins = rng.lognormal(mean=0.0, sigma=1.0, size=n)
     ins = np.clip((ins / ins.mean() * spec.mean_input).astype(int) + 1, 1, spec.max_input)
     outs = rng.lognormal(mean=0.0, sigma=1.0, size=n)
     outs = np.clip((outs / outs.mean() * spec.mean_output).astype(int) + 1, 1, spec.max_output)
+    return ins, outs
+
+
+def expected_tokens_per_request(spec: WorkloadSpec, n: int = 4096) -> float:
+    """Mean decode length of ``spec``'s output distribution, measured through
+    the same sampler ``sample_requests`` uses (clipping and the +1 shift
+    included) — what the simulator should feed its per-window token demand
+    instead of a hand-picked scalar."""
+    rng = np.random.default_rng(spec.seed)
+    _ins, outs = sample_lengths(spec, n, rng)
+    return float(outs.mean())
+
+
+def sample_requests(
+    spec: WorkloadSpec, arrivals: np.ndarray, with_prompts: bool = False
+) -> List[Request]:
+    """One request per arrival time, lengths from :func:`sample_lengths`."""
+    rng = np.random.default_rng(spec.seed)
+    n = len(arrivals)
+    ins, outs = sample_lengths(spec, n, rng)
     shared = None
     if spec.shared_prefix_len > 0:
         shared = rng.integers(

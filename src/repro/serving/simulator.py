@@ -4,12 +4,25 @@ simulation using the measured performance of various systems".
 
 Given a rate profile (15-minute windows), each policy picks a configuration
 per window using the shared performance model; the simulator accumulates
-GPU-hours and SLO attainment."""
+GPU-hours and SLO attainment.
+
+Two demand paths, one workload:
+
+* ``run_janus``/``run_policy``/``compare`` take a rate profile plus either a
+  ``tokens_per_req`` scalar or a :class:`WorkloadSpec` — with a spec, the
+  per-request token demand is measured through the *same* sampler
+  ``sample_requests`` uses (``expected_tokens_per_request``), so the
+  analytic simulator and the replayed engine see one distribution;
+* ``replay`` takes a concrete request list (e.g. ``TraceSpec.build()``) and
+  bins the requests' actual arrivals and sampled output lengths into
+  windows — the million-request path: the identical workload the engine
+  serves, pushed through every scaling policy.
+"""
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -20,6 +33,7 @@ from repro.core.baselines import (
     PolicyDecision,
 )
 from repro.core.scaling import PerfModel, SLOScaler
+from repro.serving.request import Request, WorkloadSpec, expected_tokens_per_request
 
 
 @dataclasses.dataclass
@@ -50,48 +64,140 @@ class SimResult:
             return 0.0
         return float(np.mean([r.slo_ok for r in self.records]))
 
+    @property
+    def mean_gpus(self) -> float:
+        if not self.records:
+            return 0.0
+        return float(np.mean([r.total_gpus for r in self.records]))
+
+    @property
+    def slo_per_device(self) -> float:
+        """SLO attainment per occupied device — the fig9 framing: a policy
+        that attains the SLO with fewer devices scores higher than one that
+        buys attainment with idle capacity."""
+        return self.slo_attainment / max(self.mean_gpus, 1e-9)
+
 
 class ClusterSimulator:
-    """Replays a rate profile through a scaling policy."""
+    """Replays a rate profile (or a concrete request list) through scaling
+    policies."""
 
     def __init__(self, model: PerfModel, slo: float, n_max: int = 32):
         self.model = model
         self.slo = slo
         self.n_max = n_max
 
-    def run_janus(self, window_starts, rates, tokens_per_req: float) -> SimResult:
+    # -- demand resolution ---------------------------------------------------
+    def _tokens_per_req(
+        self, tokens_per_req: Optional[float], spec: Optional[WorkloadSpec]
+    ) -> float:
+        if tokens_per_req is not None:
+            return float(tokens_per_req)
+        if spec is None:
+            raise ValueError("pass tokens_per_req or a WorkloadSpec (spec=)")
+        return expected_tokens_per_request(spec)
+
+    # -- window engines ------------------------------------------------------
+    def _run_windows(self, policy, window_starts, lams) -> SimResult:
+        """One policy over per-window token demand ``lams`` (tokens/s).
+        ``policy=None`` is the Janus SLOScaler (Algorithm 2); anything else
+        is a baseline with a ``decide`` method."""
         scaler = SLOScaler(self.model, n_max=self.n_max)
         recs = []
-        for t, r in zip(window_starts, rates):
-            lam = r * tokens_per_req
-            best = scaler.scale(lam, self.slo)
-            if best is None:
-                n_a = n_e = self.n_max
-                ev = self.model.tpot(1.0, n_a, n_e)
-                recs.append(WindowRecord(t, lam, n_a, n_e, n_a + n_e, ev.tpot, False))
+        for t, lam in zip(window_starts, lams):
+            if policy is None:
+                best = scaler.scale(lam, self.slo)
+                if best is None:
+                    n_a = n_e = self.n_max
+                    ev = self.model.tpot(1.0, n_a, n_e)
+                    recs.append(
+                        WindowRecord(t, lam, n_a, n_e, n_a + n_e, ev.tpot, False)
+                    )
+                else:
+                    recs.append(
+                        WindowRecord(
+                            t, lam, best.n_a, best.n_e, best.n_a + best.n_e,
+                            best.tpot, best.tpot <= self.slo,
+                        )
+                    )
             else:
+                d: PolicyDecision = policy.decide(scaler, lam, self.slo)
+                ev = scaler.evaluate(lam, self.slo, d.n_a, d.n_e)
+                tpot = ev.tpot if ev is not None else float("inf")
                 recs.append(
-                    WindowRecord(t, lam, best.n_a, best.n_e, best.n_a + best.n_e, best.tpot, best.tpot <= self.slo)
+                    WindowRecord(
+                        t, lam, d.n_a, d.n_e, d.total_gpus, tpot,
+                        d.feasible and tpot <= self.slo,
+                    )
                 )
         return SimResult(recs)
 
-    def run_policy(self, policy, window_starts, rates, tokens_per_req: float) -> SimResult:
-        scaler = SLOScaler(self.model, n_max=self.n_max)
-        recs = []
-        for t, r in zip(window_starts, rates):
-            lam = r * tokens_per_req
-            d: PolicyDecision = policy.decide(scaler, lam, self.slo)
-            ev = scaler.evaluate(lam, self.slo, d.n_a, d.n_e)
-            tpot = ev.tpot if ev is not None else float("inf")
-            recs.append(
-                WindowRecord(t, lam, d.n_a, d.n_e, d.total_gpus, tpot, d.feasible and tpot <= self.slo)
-            )
-        return SimResult(recs)
+    # -- rate-profile API ----------------------------------------------------
+    def run_janus(
+        self,
+        window_starts,
+        rates,
+        tokens_per_req: Optional[float] = None,
+        spec: Optional[WorkloadSpec] = None,
+    ) -> SimResult:
+        tpr = self._tokens_per_req(tokens_per_req, spec)
+        return self._run_windows(None, window_starts, np.asarray(rates) * tpr)
 
-    def compare(self, window_starts, rates, tokens_per_req: float) -> Dict[str, SimResult]:
+    def run_policy(
+        self,
+        policy,
+        window_starts,
+        rates,
+        tokens_per_req: Optional[float] = None,
+        spec: Optional[WorkloadSpec] = None,
+    ) -> SimResult:
+        tpr = self._tokens_per_req(tokens_per_req, spec)
+        return self._run_windows(policy, window_starts, np.asarray(rates) * tpr)
+
+    def compare(
+        self,
+        window_starts,
+        rates,
+        tokens_per_req: Optional[float] = None,
+        spec: Optional[WorkloadSpec] = None,
+    ) -> Dict[str, SimResult]:
+        tpr = self._tokens_per_req(tokens_per_req, spec)
+        lams = np.asarray(rates) * tpr
         return {
-            "janus": self.run_janus(window_starts, rates, tokens_per_req),
-            "sglang": self.run_policy(MonolithicPolicy(), window_starts, rates, tokens_per_req),
-            "megascale": self.run_policy(CoupledPolicy(), window_starts, rates, tokens_per_req),
-            "xdeepserve": self.run_policy(FixedUnitPolicy(), window_starts, rates, tokens_per_req),
+            "janus": self._run_windows(None, window_starts, lams),
+            "sglang": self._run_windows(MonolithicPolicy(), window_starts, lams),
+            "megascale": self._run_windows(CoupledPolicy(), window_starts, lams),
+            "xdeepserve": self._run_windows(FixedUnitPolicy(), window_starts, lams),
+        }
+
+    # -- request-replay API --------------------------------------------------
+    @staticmethod
+    def window_demand(
+        requests: Sequence[Request], window_s: float
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Bin a concrete request list into ``window_s``-second windows of
+        token demand (tokens/s): each request contributes its *sampled*
+        output length to its arrival window — no re-sampling, no drift from
+        what the engine actually serves."""
+        if not requests:
+            return np.array([]), np.array([])
+        t_end = max(r.arrival for r in requests)
+        n = max(1, int(np.ceil((t_end + 1e-9) / window_s)))
+        starts = np.arange(n) * window_s
+        toks = np.zeros(n)
+        for r in requests:
+            toks[min(n - 1, int(r.arrival // window_s))] += r.output_len
+        return starts, toks / window_s
+
+    def replay(
+        self, requests: Sequence[Request], window_s: float = 60.0
+    ) -> Dict[str, SimResult]:
+        """Replay a request list (e.g. ``TraceSpec.build()`` — the same list
+        the engine serves) through every scaling policy."""
+        starts, lams = self.window_demand(requests, window_s)
+        return {
+            "janus": self._run_windows(None, starts, lams),
+            "sglang": self._run_windows(MonolithicPolicy(), starts, lams),
+            "megascale": self._run_windows(CoupledPolicy(), starts, lams),
+            "xdeepserve": self._run_windows(FixedUnitPolicy(), starts, lams),
         }

@@ -493,5 +493,6 @@ def run_forced_device_subprocess(script, timeout=540, marker="OK"):
     return r
 
 
+@pytest.mark.subprocess
 def test_disagg_multidevice_subprocess():
     run_forced_device_subprocess(SCRIPT, marker="DISAGG_OK")

@@ -391,6 +391,7 @@ print("FAULTS_OK", f)
 """
 
 
+@pytest.mark.subprocess
 def test_fault_recovery_multidevice_subprocess():
     """Real 8-device run: one plan kills a prefill, an attention and a MoE
     device at different steps; the engine recovers all three (requeue +

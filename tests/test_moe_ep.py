@@ -7,6 +7,8 @@ stay single-device per the dry-run contract)."""
 import subprocess
 import sys
 
+import pytest
+
 SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -67,6 +69,7 @@ print("EP_OK")
 """
 
 
+@pytest.mark.subprocess
 def test_ep_matches_reference_subprocess():
     r = subprocess.run(
         [sys.executable, "-c", SCRIPT],

@@ -1,0 +1,345 @@
+"""Priority preemption via KV spill/restore.
+
+The load-bearing claim: spilling is a block-table *detach* (ownership
+transfer, no copy, no refcount traffic) and restoring re-attaches the same
+pages, so a preempted request resumes mid-decode with its KV intact and its
+greedy token stream bit-identical to an uninterrupted run — on the mono and
+disagg executors, and even when an attention re-shard dissolves the
+detached pages while the request waits (restore downgrades to the
+deterministic replay path)."""
+
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).parent))
+
+from repro.configs import get_config
+from repro.models import model as model_mod
+from repro.serving.engine import ServingEngine
+from repro.serving.kv_cache import (
+    ACTIVE,
+    NULL_PAGE,
+    RESERVED,
+    PagedKVCache,
+    SlotManager,
+)
+from repro.serving.request import Request, WorkloadSpec, sample_requests
+
+PS = 16
+
+
+# ---------------------------------------------------------------------------
+# PagedKVCache spill / restore unit tests
+# ---------------------------------------------------------------------------
+
+
+def test_spill_is_ownership_transfer():
+    pager = PagedKVCache(2, 64, PS, num_pages=9)
+    pager.ensure(0, 35)  # 3 pages
+    pages = pager.slot_pages(0)
+    in_use = pager.allocator.in_use
+    rec = pager.spill(0)
+    assert rec.pages == pages and rec.tokens == 36
+    assert pager.slot_pages(0) == [] and pager.hiwater[0] == 0
+    assert all(pager.tables[0] == NULL_PAGE)
+    assert pager.allocator.in_use == in_use  # no refcount traffic
+    for p in pages:
+        assert pager.allocator.refcount(p) == 1  # still held, by the record
+    # restore lands on a *different* slot: block b → rec.pages[b] exactly
+    pager.restore(1, rec)
+    assert pager.slot_pages(1) == pages and pager.hiwater[1] == 36
+    assert list(pager.tables[1, :3]) == pages
+    rows_pages, _ = pager.rows_of(1, 0, 36)
+    assert set(rows_pages) == set(pages)
+    pager.release(1)
+    assert pager.allocator.in_use == 0
+
+
+def test_spill_composes_with_prefix_pins():
+    """A page shared with the prefix index (extra refcount) spills and drops
+    without disturbing the other holder — spill moves the slot's own pin."""
+    pager = PagedKVCache(2, 64, PS)
+    pager.ensure(0, 2 * PS - 1)
+    p0 = pager.slot_pages(0)[0]
+    pager.allocator.ref(p0)  # the prefix-index pin
+    rec = pager.spill(0)
+    assert pager.allocator.refcount(p0) == 2  # unchanged across spill
+    pager.drop_spilled(rec)
+    assert rec.pages == [] and rec.tokens == 0
+    assert pager.allocator.refcount(p0) == 1  # survived via the index pin
+    pager.allocator.free(p0)
+    assert pager.allocator.in_use == 0
+
+
+def test_restore_requires_fresh_slot():
+    pager = PagedKVCache(2, 64, PS)
+    empty = pager.spill(0)  # spilling an empty slot is a no-op record
+    assert empty.pages == [] and empty.tokens == 0
+    pager.ensure(0, 0)
+    pager.ensure(1, 0)
+    rec = pager.spill(0)
+    with pytest.raises(RuntimeError, match="fresh slot"):
+        pager.restore(1, rec)  # slot 1 still owns a page
+    pager.restore(0, rec)  # back onto the slot it left is fine
+    pager.release(0)
+    pager.release(1)
+    assert pager.allocator.in_use == 0
+
+
+def test_slot_manager_reserve_at_and_resume():
+    sm = SlotManager(3, 64)
+    req = Request(rid=0, arrival=0.0, input_len=4, output_len=8)
+    req.generated = 3
+    assert sm.reserve(req, slot=2) == 2 and sm.state[2] == RESERVED
+    sm.resume(2)
+    # resumed decode continues at input_len + generated, not input_len
+    assert sm.state[2] == ACTIVE and sm.positions[2] == 7
+    with pytest.raises(RuntimeError, match="not free"):
+        sm.reserve(Request(rid=1, arrival=0.0, input_len=2, output_len=2), slot=2)
+    with pytest.raises(RuntimeError, match="cannot resume"):
+        sm.resume(2)
+    sm.release(2)
+
+
+def test_engine_rejects_unknown_sched():
+    cfg = get_config("phi4-mini-3.8b-reduced")
+    with pytest.raises(ValueError, match="unknown admission scheduler"):
+        ServingEngine(cfg, model_mod.init_params(cfg, 0), max_batch=2,
+                      cache_len=64, scheduler="none", sched="sjf")
+
+
+# ---------------------------------------------------------------------------
+# engine-level bit-exactness: preempted streams == uninterrupted streams
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def mono():
+    cfg = get_config("phi4-mini-3.8b-reduced")
+    return cfg, model_mod.init_params(cfg, 0)
+
+
+def _streams(eng):
+    return {r.rid: tuple(r.tokens_out) for r in eng.completed}
+
+
+def _mono_contended_reqs(cfg, n_low=2, n_high=2, high_ttft=0.012):
+    """Low-priority batch requests saturating every slot when a high-priority
+    chat burst lands 10 ms in — the preemption-forcing workload."""
+    spec = WorkloadSpec(mean_input=6, mean_output=24, vocab_size=cfg.vocab_size,
+                        max_input=12, max_output=30, seed=0)
+    rs = sample_requests(spec, np.linspace(0, 0.001, n_low + n_high),
+                         with_prompts=True)
+    for r in rs[:n_low]:
+        r.priority, r.tenant, r.ttft_slo = 0, "batch", 10.0
+    for r in rs[n_low:]:
+        r.priority, r.tenant, r.ttft_slo = 5, "chat", high_ttft
+        r.arrival += 0.01
+    return rs
+
+
+def test_mono_preempted_streams_bit_identical(mono):
+    cfg, params = mono
+    runs = {}
+    for sched in ("fifo", "priority"):
+        eng = ServingEngine(cfg, params, max_batch=2, cache_len=64,
+                            scheduler="none", step_time_fn=lambda n: 2e-3,
+                            kv_page_size=PS, sched=sched)
+        m = eng.run(_mono_contended_reqs(cfg), max_steps=4000)
+        assert m["completed"] == 4
+        runs[sched] = (m, _streams(eng), eng)
+    m_fifo, s_fifo, _ = runs["fifo"]
+    m_prio, s_prio, eng_prio = runs["priority"]
+    assert m_fifo["preemptions"] == 0  # fifo is the uninterrupted baseline
+    assert m_prio["preemptions"] >= 1 and m_prio["restores"] >= 1
+    assert s_prio == s_fifo  # spill/restore is lossless
+    # the preemptions bought the chat tenant its tight TTFT SLO
+    assert m_prio["slo"]["per_tenant"]["chat"] > m_fifo["slo"]["per_tenant"]["chat"]
+    assert m_prio["slo"]["attainment"] > m_fifo["slo"]["attainment"]
+    assert any(r.preemptions > 0 for r in eng_prio.completed)
+    # free-on-release + drop-on-restore drained the pool completely
+    assert m_prio["kv_pages"]["pages_in_use"] == 0
+
+
+def test_mono_priority_without_paged_kv_orders_but_never_preempts(mono):
+    """Contiguous KV cannot spill; the priority scheduler still reorders
+    admission (high priority first among the waiting) but never preempts,
+    and everything completes."""
+    cfg, params = mono
+    eng = ServingEngine(cfg, params, max_batch=2, cache_len=64,
+                        scheduler="none", step_time_fn=lambda n: 2e-3,
+                        sched="priority")
+    m = eng.run(_mono_contended_reqs(cfg), max_steps=4000)
+    assert m["completed"] == 4 and m["preemptions"] == 0
+
+
+def test_spilled_deadline_drop_frees_pages(mono):
+    """A spilled request whose deadline lapses off-batch is rejected and its
+    detached pages return to the pool (no leak, no restore)."""
+    cfg, params = mono
+    spec = WorkloadSpec(mean_input=6, mean_output=24, vocab_size=cfg.vocab_size,
+                        max_input=12, max_output=30, seed=0)
+    rs = sample_requests(spec, [0.0, 0.005], with_prompts=True)
+    rs[0].priority, rs[0].deadline = 0, 0.02  # dies while spilled
+    rs[1].priority = 5
+    eng = ServingEngine(cfg, params, max_batch=1, cache_len=64,
+                        scheduler="none", step_time_fn=lambda n: 2e-3,
+                        kv_page_size=PS, sched="priority")
+    m = eng.run(rs, max_steps=4000)
+    assert m["preemptions"] == 1 and m["restores"] == 0
+    assert m["completed"] == 1 and m["rejected"] == 1
+    assert rs[0].rejected and rs[0].preemptions == 1
+    assert m["kv_pages"]["pages_in_use"] == 0
+
+
+# ---------------------------------------------------------------------------
+# disagg executor: shard-affine spill/restore
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def dsv2():
+    cfg = get_config("dsv2-lite-reduced")
+    from repro.core.aebs import ReplicaLayout
+
+    params = model_mod.init_params(cfg, 0)
+    layout = ReplicaLayout.round_robin(cfg.num_experts, 2, 3)
+    return cfg, params, layout
+
+
+def _disagg_engine(cfg, params, layout, sched, **kw):
+    return ServingEngine(
+        cfg, params, max_batch=4, cache_len=64, layout=layout,
+        scheduler="aebs", capacity_tokens=64,
+        executor="disagg", n_attn=2, n_prefill=1, prefill_chunk=4,
+        step_time_fn=lambda n: 2e-3, kv_page_size=PS, sched=sched, **kw,
+    )
+
+
+def _disagg_contended_reqs(cfg):
+    spec = WorkloadSpec(mean_input=6, mean_output=24, vocab_size=cfg.vocab_size,
+                        max_input=12, max_output=30, seed=0)
+    rs = sample_requests(spec, np.linspace(0, 0.001, 6), with_prompts=True)
+    for r in rs[:4]:
+        r.priority, r.tenant, r.ttft_slo = 0, "batch", 10.0
+    for r in rs[4:]:
+        r.priority, r.tenant, r.ttft_slo = 5, "chat", 0.015
+        r.arrival += 0.01
+    return rs
+
+
+def test_disagg_preempted_streams_bit_identical(dsv2):
+    """Spill/restore across the batch-sharded attention pool: restores are
+    shard-affine (page ids are pool-local), and streams match the
+    uninterrupted FIFO run bit-for-bit."""
+    cfg, params, layout = dsv2
+    runs = {}
+    for sched in ("fifo", "priority"):
+        eng = _disagg_engine(cfg, params, layout, sched)
+        m = eng.run(_disagg_contended_reqs(cfg), max_steps=4000)
+        assert m["completed"] == 6
+        runs[sched] = (m, _streams(eng))
+    m_prio, s_prio = runs["priority"]
+    assert m_prio["preemptions"] >= 1 and m_prio["restores"] >= 1
+    assert s_prio == runs["fifo"][1]
+    assert m_prio["slo"]["attainment"] > runs["fifo"][0]["slo"]["attainment"]
+    assert m_prio["kv_pages"]["pages_in_use"] == 0
+
+
+def test_disagg_attn_loss_while_spilled_replays_bit_identical(dsv2):
+    """An attention-shard loss lands *while requests sit spilled*: the
+    re-shard rebuilds the page pools, dissolving the detached payloads, so
+    restores downgrade to the deterministic replay path — streams still
+    bit-identical to the uninterrupted fault-free baseline."""
+    from repro.serving.faults import DEVICE_LOSS, FaultPlan, FaultSpec, RetryPolicy
+
+    cfg, params, layout = dsv2
+    base = _disagg_engine(cfg, params, layout, "fifo")
+    base.run(_disagg_contended_reqs(cfg), max_steps=4000)
+    ref = _streams(base)
+    assert len(ref) == 6
+
+    # the chat burst preempts around step 5 (clock 0.01 / 2 ms steps) and
+    # holds the spill until ~step 35 — step 12 is mid-spill-window
+    plan = FaultPlan(faults=[FaultSpec(DEVICE_LOSS, pool="attn", index=1,
+                                       at_step=12)], seed=0)
+    eng = _disagg_engine(cfg, params, layout, "priority", fault_plan=plan,
+                         retry_policy=RetryPolicy(recovery_charge_s=0.01))
+    m = eng.run(_disagg_contended_reqs(cfg), max_steps=4000)
+    assert m["completed"] == 6
+    assert m["preemptions"] >= 1 and m["restores"] >= 1
+    assert m.get("spill_replays", 0) >= 1  # the payloads really dissolved
+    assert m["faults"]["detected"] == 1 and m["faults"]["recoveries"] == 1
+    assert _streams(eng) == ref
+
+
+# ---------------------------------------------------------------------------
+# Real multi-device variant (subprocess, 8 forced host devices)
+# ---------------------------------------------------------------------------
+
+PREEMPT_FAULT_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, numpy as np
+from repro.configs import get_config
+from repro.core.aebs import ReplicaLayout
+from repro.models import model as model_mod
+from repro.serving.engine import ServingEngine
+from repro.serving.faults import DEVICE_LOSS, FaultPlan, FaultSpec, RetryPolicy
+from repro.serving.request import WorkloadSpec, sample_requests
+
+assert len(jax.devices()) == 8
+cfg = get_config("dsv2-lite-reduced")
+params = model_mod.init_params(cfg, 0)
+layout = ReplicaLayout.round_robin(cfg.num_experts, 2, 3)
+spec = WorkloadSpec(mean_input=6, mean_output=24, vocab_size=cfg.vocab_size,
+                    max_input=12, max_output=30, seed=0)
+
+def reqs():
+    rs = sample_requests(spec, np.linspace(0, 0.001, 6), with_prompts=True)
+    for r in rs[:4]:
+        r.priority, r.tenant = 0, "batch"
+    for r in rs[4:]:
+        r.priority, r.tenant = 5, "chat"
+        r.arrival += 0.01
+    return rs
+
+def engine(sched, plan=None):
+    return ServingEngine(cfg, params, max_batch=4, cache_len=64, layout=layout,
+                         scheduler="aebs", capacity_tokens=64,
+                         executor="disagg", n_attn=2, n_prefill=1,
+                         prefill_chunk=4, step_time_fn=lambda n: 2e-3,
+                         kv_page_size=16, sched=sched, fault_plan=plan,
+                         retry_policy=RetryPolicy(recovery_charge_s=0.01))
+
+base = engine("fifo")
+base.run(reqs(), max_steps=4000)
+ref = {r.rid: tuple(r.tokens_out) for r in base.completed}
+assert len(ref) == 6
+
+# kill a real attention device mid-spill-window: detached payloads dissolve
+# and the preempted requests restore by deterministic replay
+plan = FaultPlan(faults=[FaultSpec(DEVICE_LOSS, pool="attn", index=1,
+                                   at_step=12)], seed=0)
+eng = engine("priority", plan)
+m = eng.run(reqs(), max_steps=4000)
+got = {r.rid: tuple(r.tokens_out) for r in eng.completed}
+assert got == ref, "preempted streams diverged after attention loss"
+assert m["preemptions"] >= 1 and m["restores"] >= 1, m
+assert m.get("spill_replays", 0) >= 1, m
+assert m["faults"]["detected"] == 1 and m["faults"]["recoveries"] == 1, m["faults"]
+print("PREEMPT_FAULTS_OK", m["preemptions"], m["restores"], m["spill_replays"])
+"""
+
+
+@pytest.mark.subprocess
+def test_preempt_attn_kill_multidevice_subprocess():
+    """8 physically distinct devices: priority preemption spills KV on a real
+    sharded attention pool, the shard hosting the spill dies, and every
+    stream still matches the uninterrupted single-pool-loss-free baseline."""
+    from tests.test_disagg import run_forced_device_subprocess
+
+    run_forced_device_subprocess(PREEMPT_FAULT_SCRIPT, marker="PREEMPT_FAULTS_OK")
