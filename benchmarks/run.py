@@ -35,6 +35,7 @@ MODULES = [
     "slo_schedule_bench",
     "paged_kv_bench",
     "prefix_cache_bench",
+    "spec_decode_bench",
     "roofline_report",
 ]
 

@@ -1,0 +1,276 @@
+"""Speculative-decode shootout: draft-k/verify-1 multi-token decode vs plain
+greedy on both executors, bit-exactness gated through faults and preemption.
+
+The tentpole claim: a small draft model proposes ``spec_k`` tokens per step,
+one batched ``decode_step_verify`` scores all ``spec_k + 1`` positions, and
+the engine accepts the longest greedy-matching prefix — so every verify round
+emits 1..k+1 tokens while the output stream stays *bit-identical to
+non-speculative greedy by construction* (rejected rows never dirty the KV
+cache; the verify logits at an accepted position depend only on accepted
+stream tokens).  This bench drives the continuous-batching engine through a
+reduced chat preset on the MoE config and writes ``BENCH_spec_decode.json``
+at the repo root:
+
+* ``mono_base`` / ``mono_spec``       — single-pool executor, spec off/on;
+* ``disagg_base`` / ``disagg_spec``   — two-pool executor at equal device
+  counts, the verify exchange batching k+1 tokens per slot through the
+  adaptive two-phase dispatch;
+* ``disagg_spec_fault``               — spec on + mid-run attention device
+  kill, recovered by deterministic replay;
+* ``preempt_base`` / ``preempt_spec`` — priority scheduler, paged KV: a
+  high-priority arrival spills a draft-mid-flight slot, which later
+  restores and resumes speculating.
+
+The clock is modeled: a plain decode step costs ``T_DECODE``; a verify round
+costs ``T_DECODE + (k + 1) * T_DRAFT`` (draft forwards at 1/8 the target
+step — the size ratio a real draft pairing buys; the bench self-drafts so
+acceptance is the upper bound, making this the amortisation ceiling).  Gates:
+
+    mean accepted tokens/step > 1.5 on the chat preset,
+    spec tokens/s > non-spec tokens/s on disagg at equal devices,
+    streams bit-identical to non-spec greedy on both executors,
+    ... including through the attention kill and a preempt/restore cycle
+    (which must actually preempt — the run asserts preemptions >= 1).
+
+Run:  PYTHONPATH=src python -m benchmarks.spec_decode_bench
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import Row
+from repro.configs import get_config
+from repro.core.aebs import ReplicaLayout
+from repro.models import model as model_mod
+from repro.serving.engine import ServingEngine
+from repro.serving.faults import DEVICE_LOSS, FaultPlan, FaultSpec, RetryPolicy
+from repro.serving.request import WorkloadSpec, sample_requests
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_PATH = os.path.join(REPO_ROOT, "BENCH_spec_decode.json")
+
+ARCH = "dsv2-lite-reduced"  # MoE: verify must survive the scheduled-MoE path
+SPEC_K = 3
+CACHE_LEN = 64
+PAGE_SIZE = 16
+N_REQUESTS = 6
+
+T_DECODE = 2e-3  # modeled target decode/verify step
+T_DRAFT = T_DECODE / 8  # modeled draft forward (8x-smaller draft)
+SPEC_STEP = T_DECODE + (SPEC_K + 1) * T_DRAFT  # one verify round, all-in
+
+
+def _chat_requests(cfg, n=N_REQUESTS):
+    """Chat preset scaled to the reduced configs (short turns, lognormal)."""
+    spec = WorkloadSpec(
+        mean_input=6.0, mean_output=14.0, vocab_size=cfg.vocab_size,
+        max_input=16, max_output=24, seed=3,
+    )
+    return sample_requests(spec, np.linspace(0.0, 0.01, n), with_prompts=True)
+
+
+def _streams(eng) -> Dict[int, tuple]:
+    return {r.rid: tuple(r.tokens_out) for r in eng.completed}
+
+
+def _spec_kw(cfg, spec: bool) -> dict:
+    if not spec:
+        return dict(step_time_fn=lambda n: T_DECODE)
+    # self-draft: target params double as the draft (acceptance 1.0 ceiling);
+    # the modeled clock charges the k+1 draft forwards at the 8x-smaller rate
+    return dict(
+        draft_config=cfg, spec_k=SPEC_K, step_time_fn=lambda n: SPEC_STEP
+    )
+
+
+def _run_mono(cfg, params, spec: bool, **kw):
+    eng = ServingEngine(
+        cfg, params, max_batch=4, cache_len=CACHE_LEN, scheduler="none",
+        n_prefill=1, prefill_chunk=4,
+        prefill_time_fn=lambda n: n * 1e-3, **_spec_kw(cfg, spec), **kw,
+    )
+    m = eng.run(_chat_requests(cfg), max_steps=20_000)
+    assert m["completed"] == N_REQUESTS, m
+    return eng, m
+
+
+def _run_disagg(cfg, params, layout, spec: bool, **kw):
+    eng = ServingEngine(
+        cfg, params, max_batch=4, cache_len=CACHE_LEN, layout=layout,
+        scheduler="aebs", capacity_tokens=CACHE_LEN, executor="disagg",
+        n_attn=2, n_prefill=1, prefill_chunk=4,
+        prefill_time_fn=lambda n: n * 1e-3, **_spec_kw(cfg, spec), **kw,
+    )
+    m = eng.run(_chat_requests(cfg), max_steps=20_000)
+    assert m["completed"] == N_REQUESTS, m
+    return eng, m
+
+
+def _run_preempt(cfg, params, spec: bool):
+    """Priority scheduler + paged KV: two long low-priority requests fill the
+    batch, a high-priority arrival preempts one mid-decode (mid-draft when
+    spec is on), and the spilled request later restores and finishes."""
+    reqs = _chat_requests(cfg, n=3)
+    for r in reqs[:2]:
+        r.arrival, r.priority, r.output_len = 0.0, 0, 40
+    hi = reqs[2]
+    hi.arrival, hi.priority, hi.output_len = 0.012, 5, 6
+    eng = ServingEngine(
+        cfg, params, max_batch=2, cache_len=CACHE_LEN, scheduler="none",
+        n_prefill=1, prefill_chunk=4, kv_page_size=PAGE_SIZE,
+        kv_num_pages=17, sched="priority", prefill_time_fn=lambda n: n * 1e-3,
+        **_spec_kw(cfg, spec),
+    )
+    m = eng.run(reqs, max_steps=20_000)
+    assert m["completed"] == 3, m
+    return eng, m
+
+
+def _tok_s(m) -> float:
+    return m["tokens"] / max(m["clock"], 1e-9)
+
+
+def run_modes() -> Dict:
+    cfg = get_config(ARCH)
+    params = model_mod.init_params(cfg, 0)
+    layout = ReplicaLayout.round_robin(cfg.num_experts, 2, 3)
+
+    results = []
+
+    def _record(name, eng, m, devices):
+        spec = m.get("spec", {})
+        results.append(
+            {
+                "mode": name,
+                "devices": devices,
+                "tok_s": round(_tok_s(m), 1),
+                "clock_s": round(m["clock"], 4),
+                "verify_steps": m.get("spec", {}).get("steps", 0),
+                "accepted_per_step": round(spec.get("accepted_per_step", 0.0), 3),
+                "acceptance_rate": round(spec.get("acceptance_rate", 0.0), 3),
+                "transfer_bytes_per_step": m.get("transfer_bytes_per_step", 0.0),
+            }
+        )
+        return _streams(eng)
+
+    s_mono_base = _record("mono_base", *_run_mono(cfg, params, spec=False), 1)
+    s_mono_spec = _record("mono_spec", *_run_mono(cfg, params, spec=True), 1)
+    s_dis_base = _record(
+        "disagg_base", *_run_disagg(cfg, params, layout, spec=False), 5
+    )
+    s_dis_spec = _record(
+        "disagg_spec", *_run_disagg(cfg, params, layout, spec=True), 5
+    )
+
+    plan = FaultPlan(faults=[FaultSpec(DEVICE_LOSS, pool="attn", index=1, at_step=3)])
+    eng_f, m_f = _run_disagg(
+        cfg, params, layout, spec=True, fault_plan=plan,
+        retry_policy=RetryPolicy(recovery_charge_s=0.01),
+    )
+    s_fault = _record("disagg_spec_fault", eng_f, m_f, 5)
+
+    eng_pb, m_pb = _run_preempt(cfg, params, spec=False)
+    s_pre_base = _record("preempt_base", eng_pb, m_pb, 1)
+    eng_ps, m_ps = _run_preempt(cfg, params, spec=True)
+    s_pre_spec = _record("preempt_spec", eng_ps, m_ps, 1)
+    assert m_ps["preemptions"] >= 1, m_ps  # the cycle must actually happen
+
+    by = {r["mode"]: r for r in results}
+    gates = {
+        "accepted_per_step_gt_1.5": bool(
+            by["mono_spec"]["accepted_per_step"] > 1.5
+            and by["disagg_spec"]["accepted_per_step"] > 1.5
+        ),
+        "disagg_spec_tok_s_gt_base": bool(
+            by["disagg_spec"]["tok_s"] > by["disagg_base"]["tok_s"]
+        ),
+        "streams_bit_identical": bool(
+            s_mono_spec == s_mono_base
+            and s_dis_spec == s_dis_base
+            and s_dis_base == s_mono_base
+        ),
+        "fault_preempt_bit_identical": bool(
+            s_fault == s_dis_base
+            and s_pre_spec == s_pre_base
+            and m_ps["preemptions"] >= 1
+            and m_f["faults"]["injected"] >= 1
+        ),
+    }
+    return {
+        "bench": "spec_decode",
+        "arch": ARCH,
+        "spec_k": SPEC_K,
+        "draft": "self (acceptance ceiling); modeled 8x-smaller draft cost",
+        "workload": f"{N_REQUESTS}x chat preset (lognormal, reduced lengths)",
+        "modeled_clock": {
+            "t_decode_s": T_DECODE,
+            "t_draft_s": T_DRAFT,
+            "t_spec_step_s": SPEC_STEP,
+        },
+        "disagg_speedup": round(
+            by["disagg_spec"]["tok_s"] / max(by["disagg_base"]["tok_s"], 1e-9), 2
+        ),
+        "fault": {
+            "injected": m_f["faults"]["injected"],
+            "recoveries": m_f["faults"]["recoveries"],
+            "degraded": m_f["faults"]["degraded"],
+        },
+        "preempt": {
+            "preemptions": m_ps["preemptions"],
+            "restores": m_ps["restores"],
+        },
+        "gates": gates,
+        "modes": results,
+    }
+
+
+def run() -> List[Row]:
+    """Harness entry point (benchmarks.run)."""
+    report = run_modes()
+    with open(OUT_PATH, "w") as fh:
+        json.dump(report, fh, indent=2)
+    rows: List[Row] = []
+    for e in report["modes"]:
+        rows.append(
+            (
+                f"spec_decode/{e['mode']}",
+                e["clock_s"] * 1e6,
+                f"tok_s={e['tok_s']} accepted_per_step={e['accepted_per_step']}",
+            )
+        )
+    g = report["gates"]
+    rows.append(
+        (
+            "spec_decode/gate",
+            0.0,
+            f"accepted_per_step_gt_1.5={g['accepted_per_step_gt_1.5']} "
+            f"disagg_spec_tok_s_gt_base={g['disagg_spec_tok_s_gt_base']} "
+            f"streams_bit_identical={g['streams_bit_identical']} "
+            f"fault_preempt_bit_identical={g['fault_preempt_bit_identical']}",
+        )
+    )
+    return rows
+
+
+def main() -> None:
+    report = run_modes()
+    with open(OUT_PATH, "w") as fh:
+        json.dump(report, fh, indent=2)
+    print(f"wrote {OUT_PATH}")
+    for e in report["modes"]:
+        print(
+            f"{e['mode']:18s} tok_s={e['tok_s']:8.1f} "
+            f"accepted/step={e['accepted_per_step']:.3f} "
+            f"clock={e['clock_s']:.4f}s"
+        )
+    print(f"disagg_speedup={report['disagg_speedup']}x")
+    print("gates:", report["gates"])
+
+
+if __name__ == "__main__":
+    main()

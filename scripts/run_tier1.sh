@@ -23,7 +23,7 @@ fi
 COV_ARGS=()
 if [ "${REPRO_COV:-0}" = "1" ] && python -c "import pytest_cov" >/dev/null 2>&1; then
   COV_ARGS=(--cov=repro.serving --cov-report=term-missing:skip-covered
-            --cov-fail-under="${REPRO_COV_FLOOR:-70}")
+            --cov-fail-under="${REPRO_COV_FLOOR:-75}")
 fi
 exec python -m pytest -x -q \
   ${TIMEOUT_ARGS[@]+"${TIMEOUT_ARGS[@]}"} \

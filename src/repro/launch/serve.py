@@ -105,6 +105,18 @@ def main():
         "--slo-tpot", type=float, default=None, metavar="S",
         help="default TPOT SLO (s, p99 inter-token gap), same stamping rule",
     )
+    ap.add_argument(
+        "--draft", default=None, metavar="ARCH",
+        help="enable speculative decode with ARCH (reduced config) as the "
+        "draft model; pass the target --arch itself for self-drafting "
+        "(acceptance 1.0 — useful for overhead measurement).  Output streams "
+        "stay bit-identical to plain greedy regardless of the draft",
+    )
+    ap.add_argument(
+        "--spec-k", type=int, default=0, metavar="K",
+        help="draft tokens proposed per verify step (default 2 when --draft "
+        "is set); each step emits 1..K+1 tokens",
+    )
     args = ap.parse_args()
 
     from repro.configs import get_config
@@ -117,6 +129,9 @@ def main():
 
     cfg = get_config(args.arch + "-reduced")
     params = model_mod.init_params(cfg, args.seed)
+    draft_config = None
+    if args.draft is not None:
+        draft_config = cfg if args.draft == args.arch else get_config(args.draft + "-reduced")
     layout = None
     if cfg.has_moe and args.scheduler != "none":
         C = args.slots or (cfg.num_experts // args.n_instances + 1)
@@ -169,6 +184,8 @@ def main():
         prefix_cache_pages=args.prefix_cache_pages,
         prefill_batch=args.prefill_batch,
         sched=args.sched,
+        draft_config=draft_config,
+        spec_k=args.spec_k,
     )
     print(
         f"serving {len(reqs)} requests on {cfg.name} "

@@ -101,6 +101,16 @@ def decode_step(params, tokens, caches, cache_index, cfg, extra=None, unroll=Fal
     )
 
 
+def decode_step_verify(params, tokens, caches, cache_index, cfg, extra=None, widths=None):
+    return transformer.decode_step_verify(
+        params, tokens, caches, cache_index, cfg, extra=extra, widths=widths
+    )
+
+
+def supports_speculative_decode(cfg) -> bool:
+    return transformer.supports_speculative_decode(cfg)
+
+
 def greedy_token(logits: jax.Array) -> jax.Array:
     return jnp.argmax(logits, axis=-1).astype(jnp.int32)
 

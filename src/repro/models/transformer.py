@@ -259,6 +259,44 @@ def attention_stage_chunk(lp, x, kv, start, cfg, window=None, lengths=None):
     return x, h2, new_kv
 
 
+def attention_stage_verify(lp, x, kv, cache_index, cfg, widths=None):
+    """Speculative-verify analogue of :func:`attention_stage`: ``c`` candidate
+    rows per slot, row ``j`` attending/writing at ``cache_index[b] + j``.
+
+    Implemented as ``c`` unrolled one-token :func:`attention_stage` calls so
+    every primitive runs with exactly the decode shapes — a batched
+    ``[b, c, ·]`` formulation is mathematically equal but shape-dependent
+    accumulation order can flip bf16 near-tie argmaxes, breaking the
+    bit-exactness contract speculative acceptance relies on.  Rows at
+    ``j >= widths[b]`` write at the cache's last row (the engine's parked-slot
+    position), never at a readable position.
+
+    Same ``(x_resid, h_ffn, new_kv)`` contract and the same ``kv`` dict
+    (``bt`` block tables when paged), so the disaggregated executor composes
+    it with :func:`moe_stage` exactly like the one-token stage."""
+    bt = kv.get("bt")
+    if bt is not None:
+        cache_len = bt.shape[1] * kv["k"].shape[1]  # blocks × page rows
+    else:
+        cache_len = kv["k"].shape[1]
+    b, c, _ = x.shape
+    cache_index = jnp.asarray(cache_index)
+    if jnp.ndim(cache_index) == 0:
+        cache_index = jnp.full((b,), cache_index)
+    xs, h2s = [], []
+    cur = kv
+    for j in range(c):
+        pos_j = cache_index + j
+        if widths is not None:
+            pos_j = jnp.where(j < widths, jnp.minimum(pos_j, cache_len - 1), cache_len - 1)
+        else:
+            pos_j = jnp.minimum(pos_j, cache_len - 1)
+        xj, h2j, cur = attention_stage(lp, x[:, j : j + 1], cur, pos_j, cfg)
+        xs.append(xj)
+        h2s.append(h2j)
+    return jnp.concatenate(xs, axis=1), jnp.concatenate(h2s, axis=1), cur
+
+
 def moe_stage(lp, x, h, cfg, moe_ctx=None, with_aux=False):
     """Expert half of one layer: MoE (or dense) FFN on the normalised input
     ``h``, added onto the residual stream ``x``.
@@ -502,6 +540,62 @@ def decode_step(
         out_caches["block_tables"] = block_tables
     logits = lm_head(params, x[:, 0, :], cfg)
     return logits, out_caches
+
+
+def supports_speculative_decode(cfg) -> bool:
+    """The batched verify step covers dense/moe stacks with full-context
+    attention only — the same uniform-grid constraint as batched prefill
+    (rolling-window rows cannot share one multi-position write grid, and
+    recurrent state consumes tokens serially)."""
+    return supports_batched_prefill(cfg)
+
+
+def decode_step_verify(
+    params: Params,
+    tokens: jax.Array,  # [b, c] — last accepted token + c-1 draft proposals
+    caches: Dict[str, jax.Array],
+    cache_index: jax.Array,  # [b] per-request write positions
+    cfg,
+    extra: Optional[Dict[str, Any]] = None,
+    widths: Optional[jax.Array] = None,  # [b] valid rows per slot (≤ c)
+):
+    """Speculative verify: score ``c`` candidate positions per slot in one
+    call.  Returns ``(logits [b, c, vocab], new caches)`` where row ``j``'s
+    logits equal what :func:`decode_step` would produce after appending rows
+    ``0..j-1`` — *bit-identical by construction*: the verify unrolls ``c``
+    :func:`decode_step` computations inside one jit, so every primitive runs
+    with exactly the one-token decode shapes.  A batched ``[b, c, ·]``
+    formulation is mathematically equal but not bitwise — shape-dependent
+    accumulation order can flip greedy argmax on bf16 near-ties, which is an
+    observed failure, not a theoretical one — and bitwise is the contract
+    the speculative engine's acceptance rule relies on.
+
+    Rows at ``j >= widths[b]`` are parked: their write position is clamped
+    to the cache's last row (exactly how the engine decodes parked slots),
+    so rejected or padded candidates never dirty a readable cache row —
+    rejection is pure position bookkeeping, no rollback."""
+    if not supports_speculative_decode(cfg):
+        raise ValueError(f"{cfg.name}: architecture does not support speculative decode")
+    b, c = tokens.shape
+    bt = caches.get("block_tables")
+    if bt is not None:
+        cache_len = bt.shape[1] * caches["kv_k"].shape[2]  # blocks × page rows
+    else:
+        cache_len = caches["kv_k"].shape[2]
+    cache_index = jnp.asarray(cache_index)
+    if jnp.ndim(cache_index) == 0:
+        cache_index = jnp.full((b,), cache_index)
+    logits_rows = []
+    cur = caches
+    for j in range(c):
+        pos_j = cache_index + j
+        if widths is not None:
+            pos_j = jnp.where(j < widths, jnp.minimum(pos_j, cache_len - 1), cache_len - 1)
+        else:
+            pos_j = jnp.minimum(pos_j, cache_len - 1)
+        lg, cur = decode_step(params, tokens[:, j : j + 1], cur, pos_j, cfg, extra=extra)
+        logits_rows.append(lg)
+    return jnp.stack(logits_rows, axis=1), cur
 
 
 # ---------------------------------------------------------------------------

@@ -70,7 +70,12 @@ class AutoScaler:
         self._arrivals: List[float] = []
         self._tokens: List[float] = []
         self._input_tokens: List[float] = []
+        self._accepted: List[float] = []  # per-observation accepted tokens/step
         self._kv_obs: List[tuple] = []  # (t, paged-pool occupancy) samples
+        # engine-sampled speculative acceptance (metrics()["spec"], sampled by
+        # actuate) — the fallback discount for observations that did not carry
+        # their own accepted_per_step
+        self._spec_accept_rate = 0.0
         # fraction of recent prompt tokens the prefix cache served from shared
         # pages (engine metrics()["prefix_cache"]["saved_frac"], sampled by
         # actuate) — those tokens never reach the prefill pool
@@ -105,23 +110,42 @@ class AutoScaler:
         input_tokens: float = 0.0,
         kv_occupancy: float = 0.0,
         saved_input_tokens: float = 0.0,
+        accepted_per_step: float = 0.0,
     ) -> None:
         """Log one arrival: ``tokens`` drives decode scaling, ``input_tokens``
         (the prompt length) drives prefill-pool scaling, ``kv_occupancy``
         (paged-KV pool fill fraction, 0..1) drives memory-pressure scaling.
         ``saved_input_tokens`` (prompt tokens a prefix-cache hit served from
         shared pages) are subtracted — they cost the prefill pool nothing.
-        Callers without per-request hit information can leave it 0 and let
-        :meth:`actuate`'s sampled ``saved_frac`` discount demand instead."""
+        ``accepted_per_step`` (speculative decode: mean tokens a verify step
+        emits, ≥ 1) discounts decode demand — the perf model prices decode
+        *steps*, and speculation serves that many tokens per step, so a
+        request's step demand is ``tokens / accepted_per_step``.  Callers
+        without per-request information can leave the discounts 0 and let
+        :meth:`actuate`'s engine-sampled rates apply instead."""
         self._arrivals.append(t)
         self._tokens.append(tokens)
         self._input_tokens.append(max(0.0, input_tokens - saved_input_tokens))
+        self._accepted.append(float(accepted_per_step))
         if kv_occupancy > 0.0:
             self._kv_obs.append((t, float(kv_occupancy)))
 
+    def _step_demand(self, tokens: float, accepted: float) -> float:
+        """One observation's decode-step demand: tokens discounted by the
+        speculative acceptance rate (its own, else the engine-sampled one,
+        else no speculation).  Acceptance is clamped to ≥ 1 — a verify step
+        always emits at least one token, so speculation can only *reduce*
+        step demand; halving the acceptance rate raises it back."""
+        eff = accepted if accepted > 0 else self._spec_accept_rate
+        return tokens / max(1.0, eff)
+
     def demand(self, now: float) -> float:
         lo = now - self.window
-        tok = sum(tk for t, tk in zip(self._arrivals, self._tokens) if t >= lo)
+        tok = sum(
+            self._step_demand(tk, acc)
+            for t, tk, acc in zip(self._arrivals, self._tokens, self._accepted)
+            if t >= lo
+        )
         return tok / self.window
 
     def prefill_demand(self, now: float) -> float:
@@ -147,9 +171,11 @@ class AutoScaler:
         lo = now - self.window
         sub = self.window / k
         buckets = [0.0] * k
-        for t, tok in zip(self._arrivals, self._tokens):
+        for t, tok, acc in zip(self._arrivals, self._tokens, self._accepted):
             if t >= lo:
-                buckets[min(k - 1, max(0, int((t - lo) / sub)))] += tok
+                buckets[min(k - 1, max(0, int((t - lo) / sub)))] += self._step_demand(
+                    tok, acc
+                )
         return [b / sub for b in buckets]
 
     def decide_prefill(self, now: float, demand: Optional[float] = None) -> Optional[int]:
@@ -258,6 +284,9 @@ class AutoScaler:
         prefix = m.get("prefix_cache")
         if prefix is not None:
             self._prefix_saved_frac = float(prefix.get("saved_frac", 0.0))
+        spec = m.get("spec")
+        if spec is not None:
+            self._spec_accept_rate = float(spec.get("accepted_per_step", 0.0))
         best = self.decide(now)
         # prefill devices only pay off under pipelined admission — a blocking
         # engine would keep stalling the decode clock no matter the pool size

@@ -424,10 +424,27 @@ class DisaggExecutor:
                 {"final_norm": p["final_norm"], "embed": p["embed"]}, x[:, 0, :], cfg
             )
 
+        def attn_verify_fn(lp, x, kv, positions, widths):
+            return transformer.attention_stage_verify(
+                lp, x, kv, positions, cfg, widths=widths
+            )
+
+        def head_verify_fn(p, x):  # [rows, c, d] -> [rows, c, vocab]
+            # per-position lm_head calls: each column runs with the exact
+            # one-token decode shapes, keeping verify logits bitwise equal
+            # to sequential decode (a [rows*c, d] matmul is not)
+            pp = {"final_norm": p["final_norm"], "embed": p["embed"]}
+            cols = [
+                transformer.lm_head(pp, x[:, j, :], cfg) for j in range(x.shape[1])
+            ]
+            return jnp.stack(cols, axis=1)
+
         self._embed_jit = jax.jit(embed_fn)
         self._attn_jit = jax.jit(attn_fn)
         self._dense_jit = jax.jit(dense_fn)
         self._head_jit = jax.jit(head_fn)
+        self._attn_verify_jit = jax.jit(attn_verify_fn)
+        self._head_verify_jit = jax.jit(head_verify_fn)
 
     def _build_moe_jits(self) -> None:
         """MoE-pool stage functions + the attention-side combine.  Closures
@@ -464,8 +481,58 @@ class DisaggExecutor:
                 y2d = y2d + ffn(shared_p, h2.reshape(b, d), "swiglu")
             return x + y2d.reshape(b, 1, d)
 
+        def moe_verify_fn(mp, tables, lo, h):
+            # per-position unroll of moe_fn: each candidate column routes and
+            # dispatches exactly like one sequential decode step (same token
+            # count, same baked capacity, same drop order), so expert outputs
+            # are bitwise what the equivalent one-token steps would produce.
+            # The ``c`` columns still arrived in ONE exchange — only compute
+            # is per-position, the transfer amortisation is untouched.
+            # Outputs are re-packed token-major (row, c) to match the h
+            # flattening the combine-side slicing assumes.
+            rows, c, d = h.shape
+            k = cfg.top_k
+            outs = [moe_fn(mp, tables, lo, h[:, j : j + 1]) for j in range(c)]
+            y_items = jnp.stack(
+                [o[0].reshape(rows, k, d) for o in outs], axis=1
+            ).reshape(rows * c * k, d)
+            keep = jnp.stack(
+                [o[1].reshape(rows, k) for o in outs], axis=1
+            ).reshape(rows * c * k)
+            local = jnp.stack(
+                [o[2].reshape(rows, k) for o in outs], axis=1
+            ).reshape(rows * c * k)
+            gates = jnp.stack([o[3] for o in outs], axis=1).reshape(rows * c, k)
+            load = jnp.stack([o[4] for o in outs])
+            return y_items, keep, local, gates, load
+
+        def combine_verify_fn(x, h2, shared_p, parts, gates):
+            # per-position combine_fn calls on the token-major packed parts —
+            # same one-token shapes as the sequential decode combine
+            b, s, d = x.shape
+            k = cfg.top_k
+            cols = []
+            for j in range(s):
+                parts_j = [
+                    (
+                        yg.reshape(b, s, k, d)[:, j].reshape(b * k, d),
+                        kg.reshape(b, s, k)[:, j].reshape(b * k),
+                        lg.reshape(b, s, k)[:, j].reshape(b * k),
+                    )
+                    for yg, kg, lg in parts
+                ]
+                gates_j = gates.reshape(b, s, k)[:, j]
+                cols.append(
+                    combine_fn(
+                        x[:, j : j + 1], h2[:, j : j + 1], shared_p, parts_j, gates_j
+                    )
+                )
+            return jnp.concatenate(cols, axis=1)
+
         self._moe_jit = jax.jit(moe_fn)
         self._combine_jit = jax.jit(combine_fn)
+        self._moe_verify_jit = jax.jit(moe_verify_fn)
+        self._combine_verify_jit = jax.jit(combine_verify_fn)
 
     # ------------------------------------------------------------------
     # cache interop (engine format: stacked [L, b, S, ...])
@@ -578,6 +645,16 @@ class DisaggExecutor:
             return
         si = self._shard_of(slot)
         self._pagers[si].ensure(slot - self.shards[si].lo, pos)
+
+    def truncate_slot(self, slot: int, tokens: int) -> None:
+        """Clamp ``slot``'s live length down to ``tokens`` rows (speculative
+        verify backed and wrote candidate rows past the accepted prefix —
+        pure bookkeeping, the decode mask never reads past the position)."""
+        self._slot_len[slot] = min(int(self._slot_len[slot]), int(tokens))
+        if self._pagers is None:
+            return
+        si = self._shard_of(slot)
+        self._pagers[si].truncate(slot - self.shards[si].lo, tokens)
 
     def release_slot(self, slot: int) -> None:
         """Free a released slot's pages and forget its live length."""
@@ -914,6 +991,22 @@ class DisaggExecutor:
         self, tokens, positions, collect_stage_times: bool = False
     ) -> Tuple[jax.Array, Dict]:
         """One batched decode step.  Returns (logits [b, vocab], telemetry)."""
+        return self._decode_impl(tokens, positions, None, collect_stage_times)
+
+    def decode_step_verify(
+        self, tokens, positions, widths, collect_stage_times: bool = False
+    ) -> Tuple[jax.Array, Dict]:
+        """One batched speculative-verify step: ``tokens`` is [b, c] (last
+        accepted token + drafts), ``widths`` the per-slot valid row counts.
+        Returns (logits [b, c, vocab], telemetry).  Each per-layer exchange
+        ships c rows per slot instead of one, so the transfer-bytes telemetry
+        directly shows the amortisation speculation buys."""
+        return self._decode_impl(tokens, positions, widths, collect_stage_times)
+
+    def _decode_impl(
+        self, tokens, positions, widths, collect_stage_times: bool = False
+    ) -> Tuple[jax.Array, Dict]:
+        verify = widths is not None
         self._sync_tables()
         cfg = self.cfg
         pools = self.pools
@@ -945,11 +1038,17 @@ class DisaggExecutor:
         # shard inputs + embed (attention pool)
         xs: List[jax.Array] = []
         poss: List[jax.Array] = []
+        wids: List[Optional[jax.Array]] = []
         for si, s in enumerate(self.shards):
             dev = pools.attn_devices[s.dev_index]
             tok = jax.device_put(jnp.asarray(tokens)[s.lo : s.hi], dev)
             pos = jax.device_put(jnp.asarray(positions)[s.lo : s.hi], dev)
             poss.append(pos)
+            wids.append(
+                jax.device_put(jnp.asarray(widths)[s.lo : s.hi], dev)
+                if verify
+                else None
+            )
             xs.append(self._embed_jit(self._attn_params[s.dev_index]["embed"], tok))
 
         mbs = [
@@ -974,7 +1073,14 @@ class DisaggExecutor:
                 for si in group:
                     s = self.shards[si]
                     lp = self._attn_params[s.dev_index]["layers"][li]
-                    x, h2, new_kv = self._attn_jit(lp, xs[si], self._kv[si][cidx], poss[si])
+                    if verify:
+                        x, h2, new_kv = self._attn_verify_jit(
+                            lp, xs[si], self._kv[si][cidx], poss[si], wids[si]
+                        )
+                    else:
+                        x, h2, new_kv = self._attn_jit(
+                            lp, xs[si], self._kv[si][cidx], poss[si]
+                        )
                     xs[si], h2s_all[si] = x, h2
                     self._kv[si][cidx] = new_kv
                 _tick("attn", [xs[si] for si in group], t0)
@@ -993,6 +1099,7 @@ class DisaggExecutor:
             # m's combine (attention pool) overlaps m+1's expert stage (§6 /
             # MegaScale micro-batch pipelining).
             pending: List[Tuple[int, List[int], List]] = []
+            moe_jit = self._moe_verify_jit if verify else self._moe_jit
             for m, group in enumerate(mbs):
                 attn_mb(group)
                 t0 = time.perf_counter()
@@ -1002,7 +1109,7 @@ class DisaggExecutor:
                 h_on_moe = self._run_exchange(h2s, regime, tel)
                 t0 = _tick("exchange", h_on_moe, t0)
                 res = [
-                    self._moe_jit(
+                    moe_jit(
                         self._moe_params[g]["layers"][li],
                         self._moe_params[g]["tables"],
                         self._moe_params[g]["lo"],
@@ -1014,20 +1121,21 @@ class DisaggExecutor:
                 if pending:
                     self._combine_mb(
                         *pending.pop(0), xs, h2s_all, offs, li, tel, times,
-                        collect_stage_times, amax_parts,
+                        collect_stage_times, amax_parts, verify,
                     )
                 pending.append((m, group, res))
             while pending:
                 self._combine_mb(
                     *pending.pop(0), xs, h2s_all, offs, li, tel, times,
-                    collect_stage_times, amax_parts,
+                    collect_stage_times, amax_parts, verify,
                 )
 
         t0 = time.perf_counter()
+        head_jit = self._head_verify_jit if verify else self._head_jit
         logit_shards = {}
         for si, s in enumerate(self.shards):
             p = self._attn_params[s.dev_index]
-            logit_shards[s.lo] = self._head_jit(
+            logit_shards[s.lo] = head_jit(
                 {"final_norm": p["final_norm"], "embed": p["embed"]}, xs[si]
             )
         logits = jnp.concatenate(
@@ -1046,18 +1154,23 @@ class DisaggExecutor:
         return logits, tel
 
     def _combine_mb(
-        self, m, group, res, xs, h2s_all, offs, li, tel, times, collect, amax_parts
+        self, m, group, res, xs, h2s_all, offs, li, tel, times, collect,
+        amax_parts, verify=False,
     ) -> None:
         """Ship expert partials back to the owning attention shards and run
-        the gate-combine there (mono-identical op order)."""
+        the gate-combine there (mono-identical op order).  In verify mode a
+        shard's rows carry ``c`` candidate tokens each, so item/gate slices
+        scale by the per-row token width."""
         t0 = time.perf_counter()
         k = self.cfg.top_k
+        # per-row token width: 1 in decode, c (candidate rows) in verify
+        w = xs[group[0]].shape[1] if verify else 1
         off, _total = offs[m]
         amax_parts.append(jnp.max(res[0][4]))  # load from instance 0 (redundant copies agree)
         for si in group:
             s = self.shards[si]
             dev = self.pools.attn_devices[s.dev_index]
-            r0, r1 = off[si], off[si] + s.rows
+            r0, r1 = off[si] * w, (off[si] + s.rows) * w
             parts = []
             for y_items, keep, local, _gates, _load in res:
                 part = (
@@ -1072,7 +1185,8 @@ class DisaggExecutor:
             tel["bytes_slow"] += gates.nbytes
             tel["msgs_slow"] += 1
             shared = self._attn_params[s.dev_index]["shared"][li]
-            xs[si] = self._combine_jit(xs[si], h2s_all[si], shared, parts, gates)
+            combine = self._combine_verify_jit if verify else self._combine_jit
+            xs[si] = combine(xs[si], h2s_all[si], shared, parts, gates)
         if collect:
             jax.block_until_ready([xs[si] for si in group])
             times["combine"] += time.perf_counter() - t0

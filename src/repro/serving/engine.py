@@ -112,6 +112,7 @@ class _SpillRecord:
     req: Request
     payload: Optional[Any]
     shard: Optional[int] = None
+    spilled_at: float = 0.0  # engine clock at preemption (TPOT wait split)
 
 
 class ServingEngine:
@@ -148,6 +149,9 @@ class ServingEngine:
         prefix_cache_pages: Optional[int] = None,  # index pin budget (None = unbounded)
         prefill_batch: int = 1,  # prompts fused per prefill-device chunk call
         sched: str = "fifo",  # request admission: fifo | priority (preemptive)
+        draft_config=None,  # small config drafting tokens → speculative decode
+        draft_params=None,  # default: shared weights (self-draft) or fresh init
+        spec_k: int = 0,  # drafts per verify step (0 + draft_config → 2)
     ):
         self.cfg = cfg
         self.params = params
@@ -268,6 +272,75 @@ class ServingEngine:
             return model_mod.decode_step(params, tokens, caches, positions, cfg, extra=extra)
 
         self._decode_jit = jax.jit(_decode)
+
+        # --- speculative decode: draft model + batched greedy verify -------
+        # The draft proposes ``spec_k`` tokens per iteration; one
+        # ``decode_step_verify`` call scores all of them (plus the last
+        # accepted token) in a single pass and the longest greedy-matching
+        # prefix is accepted.  Verification is against the target's own
+        # argmax, so the emitted stream is bit-identical to non-speculative
+        # greedy decode no matter what the draft proposes — the draft only
+        # moves the acceptance rate, never the tokens.
+        if spec_k < 0:
+            raise ValueError(f"spec_k must be ≥ 0, got {spec_k}")
+        if spec_k and draft_config is None:
+            raise ValueError("spec_k > 0 requires a draft_config")
+        if draft_config is not None and spec_k == 0:
+            spec_k = 2
+        self.spec_k = int(spec_k)
+        self.draft_config = draft_config if self.spec_k else None
+        self.spec_steps = 0  # verify iterations taken
+        self.spec_slot_steps = 0  # per-slot verify participations
+        self.spec_draft_tokens = 0  # draft proposals scored
+        self.spec_draft_accepted = 0  # draft proposals accepted
+        self.spec_emitted_tokens = 0  # tokens emitted by verify steps
+        self._draft_params = None
+        self._draft_caches = None
+        # slot → (rid, n): draft cache rows [0, n) mirror request rid's true
+        # token stream; anything less at decode position forces a rebuild
+        self._draft_stream: Dict[int, tuple] = {}
+        if self.spec_k:
+            dcfg = draft_config
+            if not model_mod.supports_speculative_decode(cfg):
+                raise ValueError(
+                    "speculative decode requires full-context dense/moe decode "
+                    "layers (rolling-window / recurrent state has no batched "
+                    "multi-position verify)"
+                )
+            if dcfg.vocab_size != cfg.vocab_size:
+                raise ValueError(
+                    f"draft vocab ({dcfg.vocab_size}) must match target vocab "
+                    f"({cfg.vocab_size}) — draft tokens are verified verbatim"
+                )
+            if draft_params is not None:
+                self._draft_params = draft_params
+            elif dcfg is cfg or dcfg.name == cfg.name:
+                self._draft_params = params  # self-draft: share target weights
+            else:
+                self._draft_params = model_mod.init_params(dcfg, seed=0)
+            self._draft_caches = model_mod.init_decode_caches(
+                dcfg, max_batch, cache_len
+            )
+
+            def _draft_decode(dparams, tokens, caches, positions):
+                return model_mod.decode_step(dparams, tokens, caches, positions, dcfg)
+
+            def _draft_prefill(dparams, tokens):
+                return model_mod.prefill(dparams, tokens, dcfg, cache_len)
+
+            def _verify(params, tokens, caches, positions, widths):
+                # same extra as the base decode closure: the verify unrolls
+                # per-position decode steps, so each routes exactly b tokens
+                # under the unchanged capacity budget — identical drop
+                # patterns to sequential decode by construction
+                extra = {"moe_ctx": moe_ctx} if moe_ctx else None
+                return model_mod.decode_step_verify(
+                    params, tokens, caches, positions, cfg, extra=extra, widths=widths
+                )
+
+            self._draft_decode_jit = jax.jit(_draft_decode)
+            self._draft_prefill_jit = jax.jit(_draft_prefill)
+            self._verify_jit = jax.jit(_verify)
 
         # prefill path: logical-expert routing (no scheduling — prompts don't
         # route through replica slots) on the sort-based grouped dispatch.
@@ -569,17 +642,17 @@ class ServingEngine:
         if lost_rows:
             self._rebuild_lost_slots(lost_rows)
 
-    def _guarded_decode(self, positions) -> tuple:
+    def _guarded_decode(self, positions, spec=None) -> tuple:
         """One decode step with the fault envelope: transient exchange faults
         retry the (idempotent) step under exponential backoff; a spent retry
         budget or an unrecoverable fault degrades to mono; injected
         sub-deadline delays are charged to the clock."""
         if self.faults is None:
-            return self._decode_once(positions)
+            return self._decode_once(positions, spec)
         attempt = 0
         while True:
             try:
-                logits, tel = self._decode_once(positions)
+                logits, tel = self._decode_once(positions, spec)
             except PoolFault as fault:
                 if not fault.transient:
                     self._recover(fault)
@@ -595,7 +668,20 @@ class ServingEngine:
             self._charge(self.faults.consume_delay())
             return logits, tel
 
-    def _decode_once(self, positions) -> tuple:
+    def _decode_once(self, positions, spec=None) -> tuple:
+        if spec is not None:
+            vtokens, widths = spec
+            if self.disagg is not None:
+                logits, tel = self.disagg.decode_step_verify(
+                    vtokens, positions, widths
+                )
+                logits.block_until_ready()
+                return logits, tel
+            logits, self.caches = self._verify_jit(
+                self.params, vtokens, self.caches, positions, widths
+            )
+            logits.block_until_ready()
+            return logits, None
         if self.disagg is not None:
             logits, tel = self.disagg.decode_step(self.tokens, positions)
             logits.block_until_ready()
@@ -793,8 +879,13 @@ class ServingEngine:
         # nothing because spill already emptied the ownership list)
         self._release_pages(slot)
         req.preemptions += 1
-        self._spilled.append(_SpillRecord(req=req, payload=payload, shard=shard))
+        self._spilled.append(
+            _SpillRecord(
+                req=req, payload=payload, shard=shard, spilled_at=self.clock
+            )
+        )
         self.preempt_count += 1
+        self._draft_stream.pop(slot, None)
         return req
 
     def _restore_record(self, rec: _SpillRecord, slot: int) -> None:
@@ -815,6 +906,11 @@ class ServingEngine:
                 self.disagg.restore_slot(slot, rec.payload)
             self.slots.resume(slot)
         self.tokens = self.tokens.at[slot, 0].set(req.tokens_out[-1])
+        # the park time between two of the request's tokens is scheduling
+        # wait, not decode latency — record it so TPOT can split it out
+        if req.wait_spans is None:
+            req.wait_spans = []
+        req.wait_spans.append((rec.spilled_at, self.clock))
         self.restore_count += 1
 
     def _drop_spill(self, rec: _SpillRecord) -> None:
@@ -969,18 +1065,24 @@ class ServingEngine:
     # ------------------------------------------------------------------
     # paged-KV slot lifecycle
     # ------------------------------------------------------------------
-    def _ensure_pages(self) -> None:
+    def _ensure_pages(self, widths=None) -> None:
         """Back every active slot's next write position with a page (alloc on
-        append) and refresh the device block table if anything changed."""
+        append) and refresh the device block table if anything changed.  A
+        speculative verify writes ``widths[s]`` rows starting at the slot's
+        position, so its whole candidate span is backed up front."""
         if self.paged is not None:
             for s in self.slots.active_slots:
-                self.paged.ensure(s, int(self.slots.positions[s]))
+                extent = int(widths[s]) - 1 if widths is not None else 0
+                self.paged.ensure(s, int(self.slots.positions[s]) + extent)
             if self.paged.dirty:
                 self.caches = dict(self.caches)
                 self.caches["block_tables"] = self.paged.table_device()
         elif self.disagg is not None:
             for s in self.slots.active_slots:
-                self.disagg.ensure_slot_pages(s, int(self.slots.positions[s]))
+                extent = int(widths[s]) - 1 if widths is not None else 0
+                self.disagg.ensure_slot_pages(
+                    s, int(self.slots.positions[s]) + extent
+                )
 
     def _ensure_slot_page(self, slot: int, pos: int) -> None:
         """Replay-path variant of :meth:`_ensure_pages` for a single slot."""
@@ -1020,7 +1122,138 @@ class ServingEngine:
         return self.prefill_worker.num_pending + len(self._ready)
 
     # ------------------------------------------------------------------
+    # speculative decode: draft → batched verify → greedy acceptance
+    # ------------------------------------------------------------------
+    def _draft_ensure(self, slot: int) -> None:
+        """Make the draft cache mirror ``slot``'s true token stream up to its
+        decode position.  Fresh activations, restores into a new slot, and
+        slot reuse all land here and rebuild by whole-history draft prefill;
+        a slot that advanced through speculation rounds is already covered.
+        The rebuild need not be numerically identical to the incremental
+        path — emitted tokens never depend on draft numerics, only the
+        acceptance rate does."""
+        req = self.slots.slot_req[slot]
+        pos = int(self.slots.positions[slot])
+        rid, have = self._draft_stream.get(slot, (None, -1))
+        if rid == req.rid and have >= pos:
+            return
+        history = self._prompt_tokens(req)
+        if req.generated:
+            history = np.concatenate(
+                [history, np.asarray(req.tokens_out[:-1], np.int32)]
+            )
+        _, one = self._draft_prefill_jit(
+            self._draft_params, jnp.asarray(history[None, :])
+        )
+        self._draft_caches = scatter_prefill_caches(self._draft_caches, one, slot)
+        self._draft_stream[slot] = (req.rid, pos)
+
+    def _spec_widths(self) -> np.ndarray:
+        """Per-slot verify width: ``spec_k + 1`` rows (last accepted token +
+        drafts), clamped so a slot never scores past its remaining output
+        budget or the cache rows non-speculative decode could have written
+        (positions ≤ cache_len - 3 before the truncation check)."""
+        c = self.spec_k + 1
+        widths = np.zeros(self.max_batch, np.int32)
+        for s in self.slots.active_slots:
+            req = self.slots.slot_req[s]
+            pos = int(self.slots.positions[s])
+            w = min(c, req.output_len - req.generated, self.cache_len - 2 - pos)
+            widths[s] = max(1, w)
+        return widths
+
+    def _spec_iteration(self) -> None:
+        """One speculative decode iteration: k + 1 draft forwards (the extra
+        one keeps the draft cache exactly one token behind the feed so a
+        fully accepted round never leaves a stale row), one batched verify,
+        then per-slot greedy acceptance.  Each slot gains between 1 and
+        ``spec_k + 1`` tokens; rejected rows are left beyond the advanced
+        position where the decode mask never reads them, and the paged
+        high-water mark is truncated back to honesty."""
+        if self.faults is not None:
+            self._fault_preflight()
+        active = list(self.slots.active_slots)
+        widths = self._spec_widths()
+        self._ensure_pages(widths)
+        for s in active:
+            self._draft_ensure(s)
+        t0 = time.perf_counter()
+        c = self.spec_k + 1
+        drafts = np.zeros((self.max_batch, self.spec_k), np.int32)
+        feed = self.tokens
+        for j in range(c):
+            dpos = jnp.asarray(
+                np.minimum(self.slots.positions + j, self.cache_len - 1)
+            )
+            dlogits, self._draft_caches = self._draft_decode_jit(
+                self._draft_params, feed, self._draft_caches, dpos
+            )
+            if j < self.spec_k:
+                nxt = np.asarray(jnp.argmax(dlogits, axis=-1), np.int32)
+                drafts[:, j] = nxt
+                feed = jnp.asarray(nxt[:, None])
+        vtokens = np.zeros((self.max_batch, c), np.int32)
+        vtokens[:, 0] = np.asarray(self.tokens[:, 0])
+        vtokens[:, 1:] = drafts
+        positions = self.slots.positions_device()
+        logits, tel = self._guarded_decode(
+            positions, spec=(jnp.asarray(vtokens), jnp.asarray(widths))
+        )
+        if tel is not None:
+            self.regime_log.append(tel["regime"])
+            self.transfer_bytes_log.append(tel["bytes_total"])
+            self.amax_log.append(tel["a_max"])
+        wall = time.perf_counter() - t0
+        self.clock += (
+            self.step_time_fn(self.slots.num_active) if self.step_time_fn else wall
+        )
+        self.steps_done += 1
+        self.spec_steps += 1
+
+        greedy = np.asarray(jnp.argmax(logits, axis=-1), np.int32)  # [b, c]
+        new = self.tokens
+        for s in active:
+            if self.slots.state[s] != ACTIVE:
+                continue  # released by a recovery path mid-iteration
+            req = self.slots.slot_req[s]
+            w = int(widths[s])
+            a = 0
+            while a < w - 1 and drafts[s, a] == greedy[s, a]:
+                a += 1
+            gained = a + 1
+            self.spec_slot_steps += 1
+            self.spec_draft_tokens += w - 1
+            self.spec_draft_accepted += a
+            self.spec_emitted_tokens += gained
+            for j in range(gained):
+                req.generated += 1
+                req.token_times.append(self.clock)
+                self.slots.advance(s)
+                if req.tokens_out is not None:
+                    req.tokens_out.append(int(greedy[s, j]))
+            new = new.at[s, 0].set(int(greedy[s, a]))
+            pos = int(self.slots.positions[s])
+            # verify backed w rows but only `gained` advanced: clamp the
+            # high-water mark so spill records and occupancy stay honest
+            if self.paged is not None:
+                self.paged.truncate(s, pos)
+            elif self.disagg is not None:
+                self.disagg.truncate_slot(s, pos)
+            self._draft_stream[s] = (req.rid, pos)
+            if req.generated >= req.output_len or pos >= self.cache_len - 2:
+                if req.generated < req.output_len:
+                    req.truncated = True  # context exhausted before target
+                req.finished = self.clock
+                self.completed.append(self.slots.release(s))
+                self._release_pages(s)
+                self._draft_stream.pop(s, None)
+        self.tokens = new
+
+    # ------------------------------------------------------------------
     def _decode_iteration(self) -> None:
+        if self.spec_k:
+            self._spec_iteration()
+            return
         if self.faults is not None:
             self._fault_preflight()
         self._ensure_pages()
@@ -1172,6 +1405,24 @@ class ServingEngine:
             }
         out["decode_stall_time"] = self.decode_stall_time
         out["prefill_chunks"] = self.prefill_worker.chunks_done
+        if self.spec_k:
+            out["spec"] = {
+                "k": self.spec_k,
+                "steps": self.spec_steps,
+                "draft_tokens": self.spec_draft_tokens,
+                "accepted_draft_tokens": self.spec_draft_accepted,
+                "emitted_tokens": self.spec_emitted_tokens,
+                "accepted_per_step": (
+                    self.spec_emitted_tokens / self.spec_slot_steps
+                    if self.spec_slot_steps
+                    else 0.0
+                ),
+                "acceptance_rate": (
+                    self.spec_draft_accepted / self.spec_draft_tokens
+                    if self.spec_draft_tokens
+                    else 0.0
+                ),
+            }
         if self.paged is not None:
             out["kv_pages"] = self.paged.stats()
         elif self.disagg is not None:
@@ -1210,7 +1461,7 @@ class ServingEngine:
             out["ttft_mean"] = float(ttfts.mean())
             out["ttft_p99"] = float(np.percentile(ttfts, 99))
         gaps = np.concatenate(
-            [np.diff(r.token_times) for r in done if len(r.token_times) > 1]
+            [r.decode_gaps() for r in done if len(r.token_times) > 1]
         )
         span = max(r.finished for r in done) - min(r.arrival for r in done)
         out.update(

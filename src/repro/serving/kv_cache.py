@@ -420,6 +420,19 @@ class PagedKVCache:
             self._dirty = True
         return changed
 
+    def truncate(self, slot: int, tokens: int) -> None:
+        """Clamp ``slot``'s high-water mark down to ``tokens`` rows.
+
+        Speculative verify writes k candidate rows before acceptance is
+        known; rejected rows sit beyond the slot's advanced position, so the
+        decode mask already excludes them and later legitimate writes
+        overwrite them — truncation is pure bookkeeping honesty (occupancy
+        stats, spill record sizing), not a physical rollback.  Pages are
+        kept: the very next accepted token reuses them."""
+        if tokens < 0:
+            raise ValueError(f"cannot truncate slot {slot} to {tokens} tokens")
+        self.hiwater[slot] = min(self.hiwater[slot], tokens)
+
     def release(self, slot: int) -> None:
         """Free every page of ``slot`` (alloc-on-append / free-on-release)."""
         for page in self._owned[slot]:

@@ -46,12 +46,31 @@ class Request:
     tpot_slo: Optional[float] = None  # seconds, p99 inter-token gap
     # times this request's slot was preempted (KV spilled, later restored)
     preemptions: int = 0
+    # (spill_t, restore_t) spans this request spent parked off-batch between
+    # two of its tokens — scheduling wait, not decode latency.  TPOT excludes
+    # them so a preempted request's inter-token percentiles measure the same
+    # thing as an uninterrupted one's.
+    wait_spans: Optional[List[tuple]] = None
+
+    def decode_gaps(self) -> np.ndarray:
+        """Inter-token gaps over the decode phase, with any off-batch
+        preemption wait split out of the gap it interrupted."""
+        if not self.token_times or len(self.token_times) < 2:
+            return np.zeros(0)
+        times = np.asarray(self.token_times, float)
+        gaps = np.diff(times)
+        for a, b in self.wait_spans or []:
+            i = int(np.searchsorted(times, a, side="right")) - 1
+            if 0 <= i < len(gaps):
+                gaps[i] = max(0.0, gaps[i] - (b - a))
+        return gaps
 
     def tpot_p(self, q: float) -> float:
-        """Per-token latency percentile over the decode phase."""
-        if not self.token_times or len(self.token_times) < 2:
+        """Per-token latency percentile over the decode phase (off-batch
+        preemption waits excluded — see :meth:`decode_gaps`)."""
+        gaps = self.decode_gaps()
+        if not len(gaps):
             return 0.0
-        gaps = np.diff(self.token_times)
         return float(np.percentile(gaps, q))
 
     def ttft(self) -> Optional[float]:

@@ -201,6 +201,24 @@ def test_device_loss_streams_bit_identical(dsv2, fault_free_streams, name, spec,
         assert len(eng.disagg.pools.attn_devices) == 1
 
 
+def test_attn_loss_under_speculation_streams_bit_identical(dsv2, fault_free_streams):
+    """Kill an attention device mid-run with speculation on: deterministic
+    replay rebuilds the lost shard's KV from the accepted token history
+    (draft state rebuilds the same way), and the streams stay bit-identical
+    to the fault-free *non-speculative* run — speculation and recovery
+    compose without touching the output."""
+    cfg, params, layout = dsv2
+    spec = FaultSpec(DEVICE_LOSS, pool="attn", index=1, at_step=3)
+    eng = _engine(cfg, params, layout, plan=FaultPlan(faults=[spec]),
+                  draft_config=cfg, spec_k=2)
+    m = eng.run(_reqs(cfg), max_steps=2000)
+    got = {r.rid: list(r.tokens_out) for r in eng.completed}
+    assert got == fault_free_streams
+    f = m["faults"]
+    assert f["injected"] == 1 and f["recoveries"] == 1 and f["degraded"] == 0
+    assert m["spec"]["accepted_per_step"] > 1.0  # kept speculating after recovery
+
+
 def test_transient_exchange_retry_backoff_fake_clock(dsv2, fault_free_streams):
     """A transient exchange timeout retries the idempotent decode step under
     exponential backoff; with a modeled clock the charged stall is exactly

@@ -396,6 +396,28 @@ def test_paged_decode_kernel_backend_streams_bit_identical(monkeypatch):
     assert streams["kernel"] == streams["gather"]
 
 
+def test_paged_int8_kernel_fallback_streams_bit_identical(monkeypatch):
+    """int8 KV pools have no kernel read path, so forcing
+    REPRO_PAGED_DECODE=kernel on a quantised cache must silently fall back
+    to the gather path — and paged int8 serving stays bit-identical to
+    contiguous int8 serving (same quantise-once-at-write numerics, only the
+    page indirection differs)."""
+    import dataclasses
+
+    cfg = dataclasses.replace(get_config("phi4-mini-3.8b-reduced"), kv_quant=True)
+    params = model_mod.init_params(cfg, 0)
+    monkeypatch.setenv("REPRO_PAGED_DECODE", "kernel")
+    streams = {}
+    for name, extra in (("contig", {}), ("paged", {"kv_page_size": PS})):
+        eng = ServingEngine(cfg, params, max_batch=2, cache_len=64,
+                            scheduler="none", step_time_fn=lambda n: 2e-3,
+                            **extra)
+        m = eng.run(_reqs(cfg, 3, mean_out=4, max_out=6), max_steps=2000)
+        assert m["completed"] == 3
+        streams[name] = _streams(eng)
+    assert streams["paged"] == streams["contig"]
+
+
 # ---------------------------------------------------------------------------
 # operator surface: CLI, telemetry → autoscaler
 # ---------------------------------------------------------------------------

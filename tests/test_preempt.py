@@ -164,6 +164,31 @@ def test_mono_preempted_streams_bit_identical(mono):
     assert m_prio["kv_pages"]["pages_in_use"] == 0
 
 
+def test_mono_preempted_spec_streams_bit_identical(mono):
+    """Speculation composes with preemption: the high-priority burst spills a
+    slot mid-draft, the spilled request later restores with its draft stream
+    rebuilt from the accepted history, and the output streams stay
+    bit-identical to the uninterrupted non-speculative FIFO run."""
+    cfg, params = mono
+    runs = {}
+    for name, kw in (
+        ("fifo_base", dict(sched="fifo")),
+        ("prio_spec", dict(sched="priority", draft_config=cfg, spec_k=2)),
+    ):
+        eng = ServingEngine(cfg, params, max_batch=2, cache_len=64,
+                            scheduler="none", step_time_fn=lambda n: 2e-3,
+                            kv_page_size=PS, **kw)
+        m = eng.run(_mono_contended_reqs(cfg), max_steps=4000)
+        assert m["completed"] == 4
+        runs[name] = (m, _streams(eng))
+    m_base, s_base = runs["fifo_base"]
+    m_spec, s_spec = runs["prio_spec"]
+    assert m_base["preemptions"] == 0  # uninterrupted baseline
+    assert m_spec["preemptions"] >= 1 and m_spec["restores"] >= 1
+    assert s_spec == s_base  # spill mid-draft + restore is lossless
+    assert m_spec["spec"]["accepted_per_step"] > 1.0  # still speculating
+
+
 def test_mono_priority_without_paged_kv_orders_but_never_preempts(mono):
     """Contiguous KV cannot spill; the priority scheduler still reorders
     admission (high priority first among the waiting) but never preempts,

@@ -310,6 +310,25 @@ def test_mono_prefix_hit_streams_bit_identical(phi4):
     assert runs["warm"][1]["ttft_mean"] < runs["cold"][1]["ttft_mean"]
 
 
+def test_prefix_hit_with_speculation_streams_bit_identical(phi4):
+    """A warm prefix splice hands the verify path a KV cache the engine never
+    prefilled itself (adopted pages + CoW tail); the draft model rebuilds its
+    own cache from the prompt tokens, and the streams stay bit-identical to
+    the cold non-speculative run."""
+    cfg, params = phi4
+    eng_cold = _mono_engine(cfg, params)
+    m_cold = eng_cold.run(_shared_reqs(cfg), max_steps=4000)
+    eng_spec = _mono_engine(cfg, params, prefix_cache=True,
+                            draft_config=cfg, spec_k=2)
+    m_spec = eng_spec.run(_shared_reqs(cfg), max_steps=4000)
+    assert m_cold["completed"] == m_spec["completed"] == 6
+    assert _streams(eng_spec) == _streams(eng_cold)
+    s = m_spec["prefix_cache"]
+    assert s["hits"] >= 4 and s["saved_tokens"] > 0  # splices actually happened
+    assert m_spec["spec"]["accepted_per_step"] > 1.0  # speculation ran on them
+    _assert_no_leaks(eng_spec)
+
+
 def test_prefix_cache_requires_paged_kv(phi4):
     cfg, params = phi4
     with pytest.raises(ValueError, match="paged KV"):

@@ -1,0 +1,336 @@
+"""Speculative multi-token decode: acceptance bookkeeping, verify-step
+bit-exactness, and stream equality across executors.
+
+The invariant under test everywhere: with greedy acceptance, the emitted
+stream is *bit-identical to non-speculative greedy decode by construction*,
+whatever the draft model proposes.  Property tests pin the host-side
+bookkeeping (accepted length, paged high-water marks); the model-level tests
+pin ``decode_step_verify`` against k sequential ``decode_step`` calls on a
+dense and an MoE config; the engine tests pin end-to-end streams with
+speculation on vs off, mono and disaggregated.
+
+Property tests import through the optional-hypothesis shim (tests/_hypo.py)
+so the module collects cleanly when hypothesis is absent."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypo import given, settings, st
+
+from repro.configs import get_config
+from repro.models import model as model_mod
+from repro.serving.engine import ServingEngine
+from repro.serving.kv_cache import PagedKVCache
+from repro.serving.request import WorkloadSpec, sample_requests
+
+DENSE = "phi4-mini-3.8b-reduced"
+MOE = "dsv2-lite-reduced"
+
+
+# ---------------------------------------------------------------------------
+# acceptance bookkeeping (hypothesis properties)
+# ---------------------------------------------------------------------------
+def _accept(drafts, greedy, w):
+    """Reference acceptance rule (the engine's inline loop): longest prefix
+    of drafts matching the verify argmaxes, capped at ``w - 1`` — a verify
+    round always emits at least 1 and at most ``w`` tokens."""
+    a = 0
+    while a < w - 1 and drafts[a] == greedy[a]:
+        a += 1
+    return a
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.data())
+def test_accepted_length_is_longest_common_prefix(data):
+    w = data.draw(st.integers(1, 8), label="w")
+    drafts = data.draw(st.lists(st.integers(0, 3), min_size=w - 1, max_size=w - 1))
+    greedy = data.draw(st.lists(st.integers(0, 3), min_size=w, max_size=w))
+    a = _accept(drafts, greedy, w)
+    # independent spec: first index where draft and verify argmax disagree
+    lcp = next((i for i in range(w - 1) if drafts[i] != greedy[i]), w - 1)
+    assert a == lcp
+    assert 1 <= a + 1 <= w
+    # emitted tokens are verify argmaxes only — never raw draft proposals
+    emitted = greedy[: a + 1]
+    assert len(emitted) == a + 1
+    for j in range(a):  # accepted drafts agree with what was emitted
+        assert emitted[j] == drafts[j]
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.data())
+def test_bookkeeping_invariants_over_accept_reject_sequences(data):
+    """Drive the real paged bookkeeping through arbitrary accept/reject
+    rounds: after every round the high-water mark equals
+    ``input_len + generated`` exactly (ensure covers the verify extent,
+    truncate clamps back past the rejected rows), and ``generated`` is
+    strictly monotone — every verify round emits at least one token."""
+    cache_len, page, k = 64, 8, 3
+    paged = PagedKVCache(max_batch=2, cache_len=cache_len, page_size=page)
+    slot = data.draw(st.integers(0, 1), label="slot")
+    input_len = data.draw(st.integers(1, 16), label="input_len")
+    paged.ensure(slot, input_len - 1)
+    pos, generated = input_len, 0
+    rounds = data.draw(st.integers(1, 12), label="rounds")
+    for _ in range(rounds):
+        if pos >= cache_len - 2:
+            break
+        w = data.draw(st.integers(1, min(k + 1, cache_len - 2 - pos)))
+        a = data.draw(st.integers(0, w - 1))  # accepted draft count
+        paged.ensure(slot, pos + w - 1)  # back every verify row up front
+        gained = a + 1
+        prev = generated
+        generated += gained
+        pos += gained
+        paged.truncate(slot, pos)  # clamp past the rejected rows
+        assert generated > prev  # monotone: every round emits >= 1
+        assert paged.hiwater[slot] == input_len + generated == pos
+    paged.release(slot)
+    assert paged.hiwater[slot] == 0
+
+
+def test_truncate_rejects_negative():
+    paged = PagedKVCache(max_batch=1, cache_len=32, page_size=8)
+    with pytest.raises(ValueError):
+        paged.truncate(0, -1)
+
+
+# ---------------------------------------------------------------------------
+# decode_step_verify vs k sequential decode_step calls (model level)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", [DENSE, MOE])
+def test_verify_matches_sequential_decode(arch):
+    """One verify call over ``[t0, d1..dk]`` must reproduce the k+1
+    sequential ``decode_step`` results bit-for-bit when the drafts are the
+    true greedy continuation (full accept): identical greedy tokens at every
+    position and identical KV rows written."""
+    cfg = get_config(arch)
+    assert model_mod.supports_speculative_decode(cfg)
+    params = model_mod.init_params(cfg, 0)
+    cache_len, prompt_len, c = 32, 6, 4
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, cfg.vocab_size, size=(1, prompt_len), dtype=np.int32)
+    logits0, caches = model_mod.prefill(params, jnp.asarray(prompt), cfg, cache_len)
+    t0 = int(model_mod.greedy_token(logits0)[0])
+
+    seq_caches = caches
+    seq_logits, stream, cur = [], [t0], t0
+    for j in range(c):
+        lg, seq_caches = model_mod.decode_step(
+            params, jnp.asarray([[cur]], jnp.int32), seq_caches,
+            jnp.asarray([prompt_len + j]), cfg,
+        )
+        seq_logits.append(np.asarray(lg[0]))
+        cur = int(model_mod.greedy_token(lg)[0])
+        stream.append(cur)
+
+    vtokens = jnp.asarray([stream[:c]], jnp.int32)  # [t0, g1, g2, g3]
+    vlogits, vcaches = model_mod.decode_step_verify(
+        params, vtokens, caches, jnp.asarray([prompt_len]), cfg,
+        widths=jnp.asarray([c]),
+    )
+    vgreedy = np.asarray(jnp.argmax(vlogits, axis=-1))[0]
+    assert list(vgreedy) == stream[1:], (list(vgreedy), stream)
+    for j in range(c):
+        np.testing.assert_allclose(
+            np.asarray(vlogits[0, j], np.float32), seq_logits[j].astype(np.float32),
+            rtol=2e-2, atol=2e-2,
+        )
+    # the KV rows the verify wrote equal the sequentially written ones
+    upto = prompt_len + c
+    for key in ("kv_k", "kv_v"):
+        if key in vcaches:
+            np.testing.assert_array_equal(
+                np.asarray(vcaches[key][:, :, :upto]),
+                np.asarray(seq_caches[key][:, :, :upto]),
+            )
+
+
+@pytest.mark.parametrize("arch", [DENSE, MOE])
+def test_verify_prefix_valid_under_rejection(arch):
+    """With deliberately wrong drafts from position j on, verify rows up to
+    and including j still argmax to the true greedy tokens — the acceptance
+    scan can trust every row it reads up to the first mismatch."""
+    cfg = get_config(arch)
+    params = model_mod.init_params(cfg, 0)
+    cache_len, prompt_len, c = 32, 5, 4
+    rng = np.random.default_rng(1)
+    prompt = rng.integers(0, cfg.vocab_size, size=(1, prompt_len), dtype=np.int32)
+    logits0, caches = model_mod.prefill(params, jnp.asarray(prompt), cfg, cache_len)
+    t0 = int(model_mod.greedy_token(logits0)[0])
+
+    seq_caches, stream, cur = caches, [t0], t0
+    for j in range(c):
+        lg, seq_caches = model_mod.decode_step(
+            params, jnp.asarray([[cur]], jnp.int32), seq_caches,
+            jnp.asarray([prompt_len + j]), cfg,
+        )
+        cur = int(model_mod.greedy_token(lg)[0])
+        stream.append(cur)
+
+    # drafts: first one right, rest deliberately wrong (greedy + 1 mod V)
+    bad = [(t + 1) % cfg.vocab_size for t in stream[2:c]]
+    vtokens = jnp.asarray([[t0, stream[1]] + bad], jnp.int32)
+    vlogits, _ = model_mod.decode_step_verify(
+        params, vtokens, caches, jnp.asarray([prompt_len]), cfg,
+        widths=jnp.asarray([c]),
+    )
+    vgreedy = np.asarray(jnp.argmax(vlogits, axis=-1))[0]
+    # rows 0 and 1 read only true stream tokens -> must match greedy exactly
+    assert int(vgreedy[0]) == stream[1]
+    assert int(vgreedy[1]) == stream[2]
+    a = _accept(list(np.asarray(vtokens[0, 1:])), list(vgreedy), c)
+    assert a == 1  # draft 0 accepted, draft 1 (deliberately wrong) rejected
+
+
+# ---------------------------------------------------------------------------
+# engine-level stream equality (mono, in-process)
+# ---------------------------------------------------------------------------
+def _chat_reqs(cfg, n=4):
+    spec = WorkloadSpec(
+        mean_input=6, mean_output=12, vocab_size=cfg.vocab_size, seed=3
+    )
+    return sample_requests(spec, np.linspace(0, 0.005, n), with_prompts=True)
+
+
+def _mono(cfg, params, **kw):
+    eng = ServingEngine(
+        cfg, params, max_batch=4, cache_len=64, scheduler="none",
+        n_prefill=1, prefill_chunk=4, step_time_fn=lambda n: 2e-3, **kw,
+    )
+    m = eng.run(_chat_reqs(cfg))
+    return {r.rid: tuple(r.tokens_out) for r in eng.completed}, m
+
+
+@pytest.fixture(scope="module")
+def dense_pair():
+    cfg = get_config(DENSE)
+    return cfg, model_mod.init_params(cfg, 0)
+
+
+def test_spec_streams_match_greedy_mono(dense_pair):
+    cfg, params = dense_pair
+    base, mb = _mono(cfg, params)
+    spec, ms = _mono(cfg, params, draft_config=cfg, spec_k=3)
+    assert spec == base
+    assert ms["spec"]["k"] == 3 and ms["spec"]["steps"] > 0
+    # self-draft: every draft token accepted, >1 token gained per slot-step
+    assert ms["spec"]["acceptance_rate"] == 1.0
+    assert 1.0 < ms["spec"]["accepted_per_step"] <= 4.0
+    # speculation takes fewer verify rounds than greedy takes decode steps
+    assert ms["spec"]["steps"] < mb["tokens"]
+
+
+def test_spec_streams_match_greedy_paged(dense_pair):
+    cfg, params = dense_pair
+    base, _ = _mono(cfg, params)
+    spec, _ = _mono(cfg, params, draft_config=cfg, spec_k=3, kv_page_size=16)
+    assert spec == base
+
+
+def test_cross_architecture_draft_still_bit_exact(dense_pair):
+    """A different-architecture draft (independently initialised — terrible
+    acceptance) changes speed only, never the stream."""
+    cfg, params = dense_pair
+    dcfg = get_config(MOE)
+    assert dcfg.vocab_size == cfg.vocab_size
+    base, _ = _mono(cfg, params)
+    spec, m = _mono(cfg, params, draft_config=dcfg, spec_k=2)
+    assert spec == base
+    assert m["spec"]["acceptance_rate"] < 1.0  # random draft: rejections real
+
+
+def test_spec_requires_draft_and_verify_support(dense_pair):
+    cfg, params = dense_pair
+    with pytest.raises(ValueError):
+        ServingEngine(cfg, params, max_batch=2, cache_len=32, spec_k=2)
+    with pytest.raises(ValueError):
+        ServingEngine(
+            cfg, params, max_batch=2, cache_len=32, spec_k=-1, draft_config=cfg
+        )
+
+
+# ---------------------------------------------------------------------------
+# autoscaler: acceptance rate feeds decode demand
+# ---------------------------------------------------------------------------
+def test_autoscaler_demand_tracks_acceptance_rate():
+    """Halving the speculative acceptance rate must raise the observed
+    decode demand: emitted tokens are discounted by tokens-per-verify-step,
+    so the same token throughput at half the acceptance means twice the
+    decode steps the pools must provision for."""
+    from repro.core.scaling import PerfModel
+    from repro.serving.controller import AutoScaler
+
+    pm = PerfModel(get_config("dsv2-lite"), s_ctx=512)
+
+    def demand_at(acc):
+        sc = AutoScaler(pm, slo=0.1, window=100.0)
+        for t in range(10):
+            sc.observe(float(t), tokens=32.0, accepted_per_step=acc)
+        return sc.demand(10.0)
+
+    d4, d2, d1 = demand_at(4.0), demand_at(2.0), demand_at(1.0)
+    assert d2 == pytest.approx(2 * d4)
+    assert d1 == pytest.approx(2 * d2)
+    # no speculation (0.0) is the undiscounted baseline, same as acceptance 1
+    assert demand_at(0.0) == pytest.approx(d1)
+    # engine-sampled fallback: actuate() stores metrics()["spec"] acceptance,
+    # which then discounts observations that carry no per-step rate
+    sc = AutoScaler(pm, slo=0.1, window=100.0)
+    sc._spec_accept_rate = 4.0
+    for t in range(10):
+        sc.observe(float(t), tokens=32.0)
+    assert sc.demand(10.0) == pytest.approx(d4)
+
+
+# ---------------------------------------------------------------------------
+# disaggregated executor (forced 8-device subprocess)
+# ---------------------------------------------------------------------------
+SPEC_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np
+from repro.configs import get_config
+from repro.core.aebs import ReplicaLayout
+from repro.models import model as model_mod
+from repro.serving.engine import ServingEngine
+from repro.serving.request import WorkloadSpec, sample_requests
+
+cfg = get_config("dsv2-lite-reduced")
+params = model_mod.init_params(cfg, 0)
+layout = ReplicaLayout.round_robin(cfg.num_experts, 2, 3)
+spec = WorkloadSpec(mean_input=6, mean_output=12, vocab_size=cfg.vocab_size, seed=3)
+
+def run(executor, **kw):
+    eng = ServingEngine(
+        cfg, params, layout=layout, max_batch=4, cache_len=64,
+        scheduler="aebs", capacity_tokens=64, executor=executor,
+        n_attn=2 if executor == "disagg" else 1, n_prefill=1,
+        prefill_chunk=4, step_time_fn=lambda n: 2e-3, **kw,
+    )
+    reqs = sample_requests(spec, np.linspace(0, 0.005, 4), with_prompts=True)
+    m = eng.run(reqs)
+    return {r.rid: tuple(r.tokens_out) for r in eng.completed}, m
+
+base_mono, _ = run("mono")
+base_dis, _ = run("disagg")
+spec_dis, md = run("disagg", draft_config=cfg, spec_k=3)
+spec_mono, _ = run("mono", draft_config=cfg, spec_k=3)
+assert base_dis == base_mono, "disagg greedy diverged from mono"
+assert spec_dis == base_dis, "disagg speculation changed the stream"
+assert spec_mono == base_mono, "mono speculation changed the stream"
+assert md["spec"]["accepted_per_step"] > 1.0, md["spec"]
+assert md["transfer_bytes_per_step"] > 0, "verify exchange not measured"
+print("SPEC_DISAGG_OK", md["spec"])
+"""
+
+
+@pytest.mark.subprocess
+def test_spec_disagg_streams_subprocess():
+    """MoE + two-pool executor: speculative streams bit-identical to greedy
+    on both executors, verify exchange telemetry live."""
+    from tests.test_disagg import run_forced_device_subprocess
+
+    run_forced_device_subprocess(SPEC_SCRIPT, marker="SPEC_DISAGG_OK")

@@ -192,6 +192,30 @@ def test_tpot_p_edge_cases():
     assert 0.1 <= r.tpot_p(50.0) <= 0.2
 
 
+def test_tpot_wait_split_excludes_preemption_spans():
+    """decode_gaps subtracts an off-batch preemption wait from exactly the
+    gap it interrupted: a preempted request's TPOT percentiles measure decode
+    latency, not scheduling, and slo_ok composes with preemption."""
+    # tokens at 0.0, 0.1, then spilled [0.1, 0.5), restored, token at 0.6
+    r = _req(token_times=[0.0, 0.1, 0.6], wait_spans=[(0.1, 0.5)])
+    gaps = r.decode_gaps()
+    assert gaps == pytest.approx([0.1, 0.1])  # 0.5 raw gap minus 0.4 wait
+    assert r.tpot_p(100.0) == pytest.approx(0.1)
+    # the same request without the span annotation blows its TPOT SLO …
+    blown = _req(token_times=[0.0, 0.1, 0.6], tpot_slo=0.2, prefill_done=0.0)
+    assert blown.slo_ok() is False
+    # … and meets it once the wait is split out
+    split = _req(token_times=[0.0, 0.1, 0.6], wait_spans=[(0.1, 0.5)],
+                 tpot_slo=0.2, prefill_done=0.0)
+    assert split.slo_ok() is True
+    # a wait longer than its containing gap clamps to zero, never negative
+    clamped = _req(token_times=[0.0, 0.3], wait_spans=[(0.0, 0.4)])
+    assert clamped.decode_gaps() == pytest.approx([0.0])
+    # spans outside the decode window are ignored
+    outside = _req(token_times=[1.0, 1.2], wait_spans=[(0.0, 0.5)])
+    assert outside.decode_gaps() == pytest.approx([0.2])
+
+
 def test_slo_ok_cases():
     assert _req().slo_ok() is None  # no SLO → not measured
     r = _req(ttft_slo=0.1)
